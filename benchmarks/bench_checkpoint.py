@@ -1,0 +1,87 @@
+"""Paper Fig. 5 — HACC-IO-style checkpoint/restart: collective (MPI-I/O
+baseline) vs storage windows vs stream offload, strong scaling in the
+state size.  The paper's claim: storage windows beat MPI-I/O by ~32% at
+scale; here the window/stream paths additionally overlap with compute
+(stream reports both enqueue latency and full-drain time).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, fresh_clovis, timeit
+from repro.checkpoint import CheckpointManager
+
+
+def _state(n_arrays: int, elems: int):
+    rng = np.random.default_rng(0)
+    return {f"layer{i:02d}": jnp.asarray(
+        rng.standard_normal(elems).astype(np.float32))
+        for i in range(n_arrays)}
+
+
+def run(sizes=((8, 65536), (16, 131072), (32, 131072)), repeats: int = 3
+        ) -> dict:
+    results = {}
+    for n_arrays, elems in sizes:
+        state = _state(n_arrays, elems)
+        nbytes = n_arrays * elems * 4
+        for strategy in ("collective", "window", "stream"):
+            clovis = fresh_clovis(f"ckpt_{strategy}")
+            cm = CheckpointManager(clovis, strategy=strategy)
+            step_counter = [0]
+
+            def save_blocking():
+                step_counter[0] += 1
+                cm.save(step_counter[0], state, block=True)
+
+            t = timeit(save_blocking, repeats=repeats)
+            bw = nbytes / t["min_s"] / 1e9
+            results[(strategy, n_arrays, elems, "save")] = t["min_s"]
+            emit(f"ckpt_save_{strategy}_{n_arrays}x{elems}",
+                 t["min_s"] * 1e6, f"bw={bw:.2f}GB/s")
+
+            if strategy == "stream":
+                # enqueue-only latency: what the train step actually waits
+                def save_async():
+                    step_counter[0] += 1
+                    cm.save(step_counter[0], state, block=False)
+
+                t2 = timeit(save_async, repeats=repeats)
+                cm.wait()
+                emit(f"ckpt_enqueue_stream_{n_arrays}x{elems}",
+                     t2["min_s"] * 1e6,
+                     f"overlap_ratio={t['min_s']/max(t2['min_s'],1e-9):.1f}x")
+                results[(strategy, n_arrays, elems, "enqueue")] = t2["min_s"]
+
+            # restart
+            like = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            last = step_counter[0]
+
+            def restore():
+                cm.restore(last, like=like)
+
+            tr = timeit(restore, repeats=repeats)
+            emit(f"ckpt_restore_{strategy}_{n_arrays}x{elems}",
+                 tr["min_s"] * 1e6, f"bw={nbytes/tr['min_s']/1e9:.2f}GB/s")
+            results[(strategy, n_arrays, elems, "restore")] = tr["min_s"]
+            cm.close()
+
+    # headline: window / stream-enqueue vs collective at the largest size
+    n_arrays, elems = sizes[-1]
+    base = results[("collective", n_arrays, elems, "save")]
+    for s in ("window", "stream"):
+        gain = 100 * (1 - results[(s, n_arrays, elems, "save")] / base)
+        emit(f"ckpt_{s}_gain_vs_collective", 0.0, f"{gain:.1f}%")
+    enq = results[("stream", n_arrays, elems, "enqueue")]
+    emit("ckpt_stream_step_time_reduction", 0.0,
+         f"{base/max(enq,1e-9):.1f}x_vs_collective")
+    return results
+
+
+if __name__ == "__main__":
+    run()

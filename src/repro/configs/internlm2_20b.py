@@ -1,0 +1,22 @@
+"""internlm2-20b — dense, GQA kv=8. [arXiv:2403.17297; hf]"""
+from repro.configs.base import GLOBAL_ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92544,
+    head_dim=128,
+    act="silu",
+    rope_theta=1_000_000.0,
+    attn_pattern=(GLOBAL_ATTN,),
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256,
+)

@@ -1,0 +1,24 @@
+"""qwen2.5-32b — dense, GQA kv=8, QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from repro.configs.base import GLOBAL_ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    act="silu",
+    rope_theta=1_000_000.0,
+    attn_pattern=(GLOBAL_ATTN,),
+)
+
+# Reduced config of the same family for CPU smoke tests.
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256,
+)

@@ -1,0 +1,28 @@
+"""SAGE percipient-storage stack (the paper's contribution).
+
+Layers, bottom-up (paper Fig. 2):
+  tiers          — deep I/O hierarchy with device performance models
+  object_store   — Mero analogue (blocks, containers, layouts, versions)
+  transactions   — DTM: crash-atomic update groups (WAL + versioning)
+  clovis         — access/index/management API on top of the store
+  ha             — failure-event digestion + automated repair
+  hsm            — usage-driven tier migration + RTHMS placement
+  function_shipping — in-storage compute executors
+  storage_window — PGAS I/O (MPI storage windows analogue)
+  streams        — MPIStream analogue (I/O offload)
+  addb / fdmi    — telemetry and plugin bus
+"""
+from repro.core.addb import Addb, GLOBAL_ADDB  # noqa: F401
+from repro.core.clovis import Clovis, ClovisIndex  # noqa: F401
+from repro.core.function_shipping import FunctionShipper  # noqa: F401
+from repro.core.ha import FailureEvent, HAMonitor  # noqa: F401
+from repro.core.hsm import HsmDaemon, HsmPolicy, recommend_tier  # noqa: F401
+from repro.core.layouts import Layout, DEFAULT_LAYOUTS  # noqa: F401
+from repro.core.object_store import ObjectStore  # noqa: F401
+from repro.core.storage_window import (MemoryWindow, StorageWindow,  # noqa: F401
+                                       WindowAllocator)
+from repro.core.streams import StreamContext, clovis_appender  # noqa: F401
+from repro.core.tiers import (DeviceModel, TierDevice, TierPool,  # noqa: F401
+                              make_tier_pools)
+from repro.core.transactions import (Transaction, TransactionManager,  # noqa: F401
+                                     WriteAheadLog)

@@ -1,0 +1,84 @@
+"""ADDB — Analysis and Diagnostics Data Base (paper §3.2.2).
+
+Structured telemetry records for every store operation, consumed by the
+benchmark harness (the paper feeds these to ARM Forge) and by the HA /
+HSM subsystems (latency percentiles drive straggler detection and
+placement demotion).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class AddbRecord:
+    ts: float
+    op: str                # put | get | delete | idx_put | idx_get | ...
+    entity: str            # object / index id
+    device: str            # device name or '-'
+    nbytes: int
+    latency_s: float
+    ok: bool = True
+
+
+class Addb:
+    """Bounded in-memory record store with per-device aggregation."""
+
+    def __init__(self, capacity: int = 100_000):
+        self.capacity = capacity
+        self._records: Deque[AddbRecord] = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self._subscribers: List[Callable[[AddbRecord], None]] = []
+
+    def record(self, op: str, entity: str, device: str, nbytes: int,
+               latency_s: float, ok: bool = True):
+        rec = AddbRecord(time.time(), op, entity, device, nbytes, latency_s, ok)
+        with self._lock:
+            self._records.append(rec)
+            subs = list(self._subscribers)
+        for fn in subs:
+            fn(rec)
+
+    def subscribe(self, fn: Callable[[AddbRecord], None]):
+        with self._lock:
+            self._subscribers.append(fn)
+
+    def records(self, op: Optional[str] = None) -> List[AddbRecord]:
+        with self._lock:
+            recs = list(self._records)
+        if op:
+            recs = [r for r in recs if r.op == op]
+        return recs
+
+    # ---- aggregations (ARM-Forge-style performance report) ----
+
+    def device_latency_percentile(self, pct: float = 0.99
+                                  ) -> Dict[str, float]:
+        by_dev: Dict[str, List[float]] = defaultdict(list)
+        for r in self.records():
+            if r.device != "-":
+                by_dev[r.device].append(r.latency_s)
+        out = {}
+        for dev, lats in by_dev.items():
+            lats.sort()
+            out[dev] = lats[min(int(pct * len(lats)), len(lats) - 1)]
+        return out
+
+    def throughput_report(self) -> Dict[str, Dict[str, float]]:
+        agg: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"ops": 0, "bytes": 0, "time": 0.0})
+        for r in self.records():
+            a = agg[r.op]
+            a["ops"] += 1
+            a["bytes"] += r.nbytes
+            a["time"] += r.latency_s
+        for a in agg.values():
+            a["bw_bytes_per_s"] = a["bytes"] / a["time"] if a["time"] else 0.0
+        return dict(agg)
+
+
+GLOBAL_ADDB = Addb()

@@ -1,0 +1,240 @@
+"""Clovis — the transactional access API on top of the object store
+(paper §3.2.2).
+
+Access interface:  object create/read/write/delete at block granularity,
+containers and layouts, transactional write groups.
+Index interface:   KV indices with GET / PUT / DEL / NEXT (records are
+key-value pairs, keys unique within an index, NEXT iterates in key order).
+Management interface:  ADDB telemetry access and the FDMI extension bus
+(HSM, integrity checking, compression plug in through it).
+
+Arrays: ``put_array`` / ``get_array`` serialise numpy/JAX arrays into
+objects with dtype/shape attrs — the bridge the checkpoint layer and the
+data pipeline use.
+"""
+from __future__ import annotations
+
+import bisect
+import io
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import layouts as lay
+from repro.core.addb import Addb
+from repro.core.object_store import ObjectStore
+from repro.core.tiers import TierPool, make_tier_pools
+from repro.core.transactions import Transaction
+
+
+class ClovisIndex:
+    """A Clovis index: ordered KV store with GET/PUT/DEL/NEXT.
+
+    Persisted as an append-only log object in the store (replayed on open),
+    so indices survive restart and inherit the object layer's layout-based
+    fault tolerance.
+    """
+
+    def __init__(self, store: ObjectStore, name: str,
+                 layout: Optional[lay.Layout] = None):
+        self.store = store
+        self.name = name
+        self.oid = f"idx/{name}"
+        self._kv: Dict[bytes, bytes] = {}
+        self._keys: List[bytes] = []
+        self._log = io.BytesIO()
+        self._lock = threading.RLock()
+        if store.exists(self.oid):
+            self._replay(store.read(self.oid))
+        else:
+            store.create_object(self.oid, block_size=1 << 16,
+                                layout=layout or lay.DEFAULT_LAYOUTS["telemetry"],
+                                container="indices",
+                                attrs={"kind": "index"})
+
+    # -- log format: [klen u32][k][vlen i32 (-1=del)][v] --
+
+    def _replay(self, data: bytes):
+        size = self.store.read_size(self.oid)
+        data = data[:size]
+        off = 0
+        while off + 8 <= len(data):
+            klen = int.from_bytes(data[off: off + 4], "little")
+            off += 4
+            k = data[off: off + klen]
+            off += klen
+            vlen = int.from_bytes(data[off: off + 4], "little", signed=True)
+            off += 4
+            if vlen < 0:
+                self._kv.pop(k, None)
+            else:
+                self._kv[k] = data[off: off + vlen]
+                off += max(vlen, 0)
+        self._keys = sorted(self._kv)
+        self._log = io.BytesIO(data)
+        self._log.seek(0, io.SEEK_END)
+
+    def _append_log(self, k: bytes, v: Optional[bytes]):
+        self._log.write(len(k).to_bytes(4, "little"))
+        self._log.write(k)
+        if v is None:
+            self._log.write((-1).to_bytes(4, "little", signed=True))
+        else:
+            self._log.write(len(v).to_bytes(4, "little", signed=True))
+            self._log.write(v)
+
+    def _persist(self):
+        raw = self._log.getvalue()
+        self.store.write(self.oid, raw)
+        self.store.meta(self.oid).attrs["size"] = len(raw)
+
+    # -- Clovis index ops (batched, like the paper's GET/PUT/DEL/NEXT) --
+
+    def put(self, records: Dict[bytes, bytes], persist: bool = True):
+        with self._lock:
+            for k, v in records.items():
+                if k not in self._kv:
+                    bisect.insort(self._keys, k)
+                self._kv[k] = v
+                self._append_log(k, v)
+            if persist:
+                self._persist()
+
+    def get(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+        with self._lock:
+            return [self._kv.get(k) for k in keys]
+
+    def delete(self, keys: Sequence[bytes], persist: bool = True):
+        with self._lock:
+            for k in keys:
+                if k in self._kv:
+                    del self._kv[k]
+                    i = bisect.bisect_left(self._keys, k)
+                    if i < len(self._keys) and self._keys[i] == k:
+                        self._keys.pop(i)
+                    self._append_log(k, None)
+            if persist:
+                self._persist()
+
+    def next(self, keys: Sequence[bytes]) -> List[Optional[Tuple[bytes, bytes]]]:
+        """For each key, the first record with key strictly greater."""
+        out: List[Optional[Tuple[bytes, bytes]]] = []
+        with self._lock:
+            for k in keys:
+                i = bisect.bisect_right(self._keys, k)
+                if i < len(self._keys):
+                    nk = self._keys[i]
+                    out.append((nk, self._kv[nk]))
+                else:
+                    out.append(None)
+        return out
+
+    def __len__(self) -> int:
+        return len(self._kv)
+
+
+class Clovis:
+    """Access + management interface facade."""
+
+    def __init__(self, root: Path, pools: Optional[Dict[str, TierPool]] = None,
+                 addb: Optional[Addb] = None, devices_per_tier: int = 2,
+                 throttle: bool = False):
+        root = Path(root)
+        self.pools = pools or make_tier_pools(root / "tiers",
+                                              devices_per_tier,
+                                              throttle=throttle)
+        self.store = ObjectStore(root / "store", self.pools, addb)
+        self.addb = self.store.addb
+        self._indices: Dict[str, ClovisIndex] = {}
+        self._lock = threading.RLock()
+
+    # ---- access interface: objects ----
+
+    def create(self, oid: str, block_size: int = 1 << 20,
+               layout: Optional[lay.Layout] = None,
+               container: str = "default", attrs: Optional[Dict] = None):
+        return self.store.create_object(oid, block_size, layout, container,
+                                        attrs)
+
+    def put(self, oid: str, data: bytes, txn: Optional[Transaction] = None):
+        self.store.meta(oid).attrs["size"] = len(data)
+        self.store.write(oid, data, txn=txn)
+
+    def get(self, oid: str) -> bytes:
+        data = self.store.read(oid)
+        return data[: self.store.read_size(oid)]
+
+    def delete(self, oid: str):
+        self.store.delete_object(oid)
+
+    def exists(self, oid: str) -> bool:
+        return self.store.exists(oid)
+
+    def transaction(self, entities: List[str]) -> Transaction:
+        return self.store.transaction(entities)
+
+    def container(self, name: str) -> List[str]:
+        return self.store.list_container(name)
+
+    # ---- access interface: arrays (checkpoint / data-pipeline bridge) ----
+
+    def put_array(self, oid: str, arr, container: str = "default",
+                  layout: Optional[lay.Layout] = None,
+                  txn: Optional[Transaction] = None):
+        arr = np.asarray(arr)
+        raw = arr.tobytes()
+        if not self.exists(oid):
+            self.create(oid, block_size=1 << 20, layout=layout,
+                        container=container,
+                        attrs={"dtype": _dtype_name(arr.dtype),
+                               "shape": list(arr.shape), "kind": "array"})
+        meta = self.store.meta(oid)
+        meta.attrs.update({"dtype": _dtype_name(arr.dtype),
+                           "shape": list(arr.shape), "size": len(raw)})
+        self.store.write(oid, raw, txn=txn)
+
+    def get_array(self, oid: str) -> np.ndarray:
+        meta = self.store.meta(oid)
+        raw = self.get(oid)
+        dtype = _dtype_from_name(meta.attrs["dtype"])
+        return np.frombuffer(raw, dtype=dtype).reshape(meta.attrs["shape"])
+
+    # ---- index interface ----
+
+    def index(self, name: str) -> ClovisIndex:
+        with self._lock:
+            if name not in self._indices:
+                self._indices[name] = ClovisIndex(self.store, name)
+            return self._indices[name]
+
+    # ---- management interface ----
+
+    def fdmi_register(self, fn):
+        self.store.fdmi_register(fn)
+
+    def addb_report(self) -> Dict:
+        return self.addb.throughput_report()
+
+    def migrate(self, oid: str, layout: lay.Layout):
+        self.store.migrate(oid, layout)
+
+
+def _dtype_name(dt) -> str:
+    try:
+        import ml_dtypes
+        if dt == np.dtype(ml_dtypes.bfloat16):
+            return "bfloat16"
+    except (ImportError, TypeError):
+        pass
+    return np.dtype(dt).name
+
+
+def _dtype_from_name(name: str):
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)

@@ -1,0 +1,94 @@
+"""FDMI plugins (paper §3.2.2) — third-party data-management extensions.
+
+The extension interface is the ObjectStore's mutation event bus
+(``fdmi_register``).  Shipped plugins mirror the paper's examples:
+integrity checking, data compression (accounting), and data indexing.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from typing import Dict, List, Optional
+
+from repro.core.clovis import Clovis
+
+
+class IntegrityPlugin:
+    """File-system-integrity-checker analogue: scrubs objects on demand
+    and records checksum violations observed on the event bus."""
+
+    def __init__(self, clovis: Clovis):
+        self.clovis = clovis
+        self.violations: List[str] = []
+        clovis.fdmi_register(self._on_event)
+
+    def _on_event(self, event: str, oid: str, info: Dict):
+        if event == "device_error" and "checksum" in info.get("error", ""):
+            self.violations.append(oid)
+
+    def scrub(self, container: str = "default") -> List[str]:
+        bad = []
+        for oid in self.clovis.container(container):
+            meta = self.clovis.store.meta(oid)
+            try:
+                data = self.clovis.store.read(oid)
+            except IOError:
+                bad.append(oid)
+                continue
+            bs = meta.block_size
+            for idx, crc in meta.checksums.items():
+                blk = data[idx * bs: (idx + 1) * bs]
+                if zlib.crc32(blk) != crc:
+                    bad.append(oid)
+                    break
+        return bad
+
+
+class CompressionPlugin:
+    """Transparent compression accounting on writes (zlib probe): records
+    the achievable ratio per object so HSM/archival policies can use it."""
+
+    def __init__(self, clovis: Clovis, level: int = 1):
+        self.clovis = clovis
+        self.level = level
+        self.ratios: Dict[str, float] = {}
+        clovis.fdmi_register(self._on_event)
+
+    def _on_event(self, event: str, oid: str, info: Dict):
+        if event != "write":
+            return
+        try:
+            data = self.clovis.get(oid)
+        except (IOError, KeyError):
+            return
+        if not data:
+            return
+        comp = zlib.compress(data[: 1 << 20], self.level)
+        self.ratios[oid] = len(data[: 1 << 20]) / max(len(comp), 1)
+
+
+class IndexingPlugin:
+    """Data-indexing plugin: maintains a Clovis index mapping containers
+    to their objects with size/kind attrs (metadata catalogue)."""
+
+    def __init__(self, clovis: Clovis, index_name: str = "catalogue"):
+        self.clovis = clovis
+        self.index = clovis.index(index_name)
+        clovis.fdmi_register(self._on_event)
+
+    def _on_event(self, event: str, oid: str, info: Dict):
+        if event in ("create", "write", "migrate"):
+            try:
+                meta = self.clovis.store.meta(oid)
+            except KeyError:
+                return
+            key = f"{meta.container}/{oid}".encode()
+            val = (f"kind={meta.attrs.get('kind', 'blob')};"
+                   f"size={meta.attrs.get('size', meta.nblocks * meta.block_size)};"
+                   f"tier={meta.layout.tier}").encode()
+            self.index.put({key: val}, persist=False)
+        elif event == "delete":
+            pref = oid.encode()
+            keys = [k for k in self.index._keys if k.endswith(pref)]
+            if keys:
+                self.index.delete(keys, persist=False)

@@ -1,0 +1,131 @@
+"""Function shipping — move the computation to the data (paper §3.2.1).
+
+Instead of fetching raw objects to the compute cluster, registered
+functions are invoked *at the store* via an RPC-shaped API: the executor
+reads blocks locally, runs a (jitted JAX) function on them, and returns
+only the (small) result.  This is the TPU-era adaptation of SAGE's
+in-storage compute: executors run on the storage host's CPUs so raw bytes
+never cross to the accelerator (DESIGN.md §2).
+
+Shipped computations are *resilient*: failures are caught, retried per
+policy, and reported — matching the paper's requirement that offloaded
+computations tolerate errors.
+
+Built-in library: reductions (sum/mean/min/max/norm), histogram,
+quantize (int8 compression stats), checksum, top-k — the data-analytics
+primitives the paper's ALF/Spectre/Savu use cases need; also
+``ship_to_container`` for the paper's one-shot per-container operations.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import zlib
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.clovis import Clovis
+
+
+@dataclass
+class ShipResult:
+    oid: str
+    fn: str
+    ok: bool
+    value: Any = None
+    error: str = ""
+    retries: int = 0
+
+
+class FunctionShipper:
+    def __init__(self, clovis: Clovis, max_workers: int = 4,
+                 max_retries: int = 2):
+        self.clovis = clovis
+        self.max_retries = max_retries
+        self._registry: Dict[str, Callable[[np.ndarray], Any]] = {}
+        self._pool = cf.ThreadPoolExecutor(max_workers=max_workers,
+                                           thread_name_prefix="sage-ship")
+        self._lock = threading.Lock()
+        self._register_builtins()
+
+    def register(self, name: str, fn: Callable[[np.ndarray], Any]):
+        with self._lock:
+            self._registry[name] = fn
+
+    def _register_builtins(self):
+        import jax
+        import jax.numpy as jnp
+
+        def red(op):
+            f = jax.jit(lambda x: op(x))
+            return lambda arr: np.asarray(f(arr.astype(np.float32))).item()
+
+        self.register("sum", red(jnp.sum))
+        self.register("mean", red(jnp.mean))
+        self.register("min", red(jnp.min))
+        self.register("max", red(jnp.max))
+        self.register("l2norm", red(lambda x: jnp.sqrt(jnp.sum(x * x))))
+
+        @jax.jit
+        def _hist(x):
+            return jnp.histogram(x, bins=32)[0]
+
+        self.register("histogram",
+                      lambda a: np.asarray(_hist(a.astype(np.float32))))
+
+        @jax.jit
+        def _q8(x):
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            return q, scale
+
+        def quant(a):
+            q, s = _q8(a.astype(np.float32))
+            return {"int8": np.asarray(q), "scale": float(s)}
+
+        self.register("quantize_int8", quant)
+        self.register("checksum", lambda a: zlib.crc32(a.tobytes()))
+        self.register(
+            "topk_abs",
+            lambda a: np.sort(np.abs(a.reshape(-1)))[-8:][::-1].copy())
+
+    # ------------------------------------------------------------------
+
+    def _run_once(self, fn_name: str, oid: str) -> Any:
+        fn = self._registry[fn_name]
+        meta = self.clovis.store.meta(oid)
+        if meta.attrs.get("kind") == "array":
+            data = self.clovis.get_array(oid)
+        else:
+            data = np.frombuffer(self.clovis.get(oid), dtype=np.uint8)
+        return fn(data)
+
+    def ship(self, fn_name: str, oid: str) -> ShipResult:
+        """Synchronous shipped invocation with retries."""
+        if fn_name not in self._registry:
+            return ShipResult(oid, fn_name, False, error="unknown function")
+        err = ""
+        for attempt in range(self.max_retries + 1):
+            try:
+                val = self._run_once(fn_name, oid)
+                return ShipResult(oid, fn_name, True, val, retries=attempt)
+            except Exception as e:     # resilient offload: catch & retry
+                err = f"{type(e).__name__}: {e}"
+        return ShipResult(oid, fn_name, False, error=err,
+                          retries=self.max_retries)
+
+    def ship_async(self, fn_name: str, oid: str) -> "cf.Future[ShipResult]":
+        return self._pool.submit(self.ship, fn_name, oid)
+
+    def ship_to_container(self, fn_name: str, container: str
+                          ) -> List[ShipResult]:
+        """One-shot operation over every object in a container (paper's
+        container-level function shipping)."""
+        futs = [self.ship_async(fn_name, oid)
+                for oid in self.clovis.container(container)]
+        return [f.result() for f in futs]
+
+    def shutdown(self):
+        self._pool.shutdown(wait=True)

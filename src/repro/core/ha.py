@@ -1,0 +1,125 @@
+"""HA subsystem — failure monitoring and automated repair (paper §3.2.1).
+
+The monitor consumes failure events across the storage tiers.  It does not
+act on events in isolation: events are digested over a sliding window of
+recent cluster history (the paper's "quasi-ordered sets of events") and a
+repair procedure is engaged only when a device's evidence crosses a
+threshold — one transient IO error is noise, a burst is a failure.
+
+Repair procedures:
+  * device failure  -> mark failed, re-silver every mirrored object and
+    rebuild parity objects onto healthy devices, then evict.
+  * checksum errors -> integrity scrub of the object.
+  * straggler (p99 latency >> tier model) -> demote: report to HSM so hot
+    objects migrate away (see core.hsm).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core.object_store import ObjectStore
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    ts: float
+    kind: str          # io_error | checksum | timeout | straggler
+    device: str
+    entity: str = ""
+    detail: str = ""
+
+
+class HAMonitor:
+    def __init__(self, store: ObjectStore, *, window_s: float = 60.0,
+                 error_threshold: int = 3,
+                 on_repair: Optional[Callable[[str, List[str]], None]] = None):
+        self.store = store
+        self.window_s = window_s
+        self.error_threshold = error_threshold
+        self.events: Deque[FailureEvent] = deque(maxlen=10_000)
+        self.repaired: List[Tuple[str, List[str]]] = []
+        self.evicted: List[str] = []
+        self._lock = threading.RLock()
+        self._on_repair = on_repair
+        # the store reports read-path device errors through FDMI
+        store.fdmi_register(self._fdmi_event)
+
+    def _fdmi_event(self, event: str, oid: str, info: Dict):
+        if event == "device_error":
+            self.observe(FailureEvent(time.time(), "io_error",
+                                      info.get("device", "?"), oid,
+                                      info.get("error", "")))
+
+    # ------------------------------------------------------------------
+
+    def observe(self, ev: FailureEvent):
+        with self._lock:
+            self.events.append(ev)
+        self._digest()
+
+    def _recent(self, device: str) -> List[FailureEvent]:
+        now = time.time()
+        return [e for e in self.events
+                if e.device == device and now - e.ts <= self.window_s]
+
+    def _digest(self):
+        """Quasi-ordered window digestion -> repair decision."""
+        with self._lock:
+            by_dev: Dict[str, int] = defaultdict(int)
+            now = time.time()
+            for e in self.events:
+                if now - e.ts <= self.window_s and e.kind in (
+                        "io_error", "checksum", "timeout"):
+                    by_dev[e.device] += 1
+            to_repair = [d for d, n in by_dev.items()
+                         if n >= self.error_threshold and d not in self.evicted]
+        for dev in to_repair:
+            self.engage_repair(dev)
+
+    # ------------------------------------------------------------------
+
+    def engage_repair(self, device_name: str) -> List[str]:
+        """Mark the device failed, re-protect all affected objects, evict."""
+        dev = self._find_device(device_name)
+        if dev is not None:
+            dev.fail()
+        affected = self.store.objects_on_device(device_name)
+        repaired = []
+        for oid in affected:
+            try:
+                if self.store.repair_object(oid, device_name):
+                    repaired.append(oid)
+            except (IOError, OSError, KeyError):
+                continue
+        with self._lock:
+            self.evicted.append(device_name)
+            self.repaired.append((device_name, repaired))
+        if self._on_repair:
+            self._on_repair(device_name, repaired)
+        return repaired
+
+    def _find_device(self, name: str):
+        for pool in self.store.pools.values():
+            for d in pool.devices:
+                if d.name == name:
+                    return d
+        return None
+
+    # ------------------------------------------------------------------
+
+    def straggler_report(self, addb, factor: float = 5.0) -> List[str]:
+        """Devices whose p99 latency exceeds `factor` x their tier model."""
+        out = []
+        p99 = addb.device_latency_percentile(0.99)
+        for pool in self.store.pools.values():
+            for d in pool.devices:
+                lat = p99.get(d.name)
+                if lat is not None and lat > factor * max(d.model.latency, 1e-9):
+                    out.append(d.name)
+                    self.observe(FailureEvent(time.time(), "straggler",
+                                              d.name))
+        return out

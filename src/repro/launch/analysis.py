@@ -1,0 +1,183 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective_bytes_per_device / ICI_link_bw
+
+``cost_analysis()`` reports per-device FLOPs/bytes for the SPMD program;
+collective bytes are parsed from the compiled HLO text by summing operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (also per-device).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,1728]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals from (per-device) HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        if "-done(" in line:      # async pairs: count the start only
+            continue
+        out[kind] += _shape_bytes(dtype, dims)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0          # 6*N*D useful flops (global)
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """Upper bound: HLO 'bytes accessed' counts every operand of every
+        (CPU-lowered, largely unfused) op — each buffer is charged once per
+        consumer.  A fused TPU pipeline moves far less HBM traffic."""
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_memory_lower(self) -> float:
+        """Lower bound: every resident byte of the step (arguments +
+        outputs + peak temporaries, from memory_analysis) is written or
+        read at least once."""
+        return (self.argument_bytes + self.output_bytes +
+                self.temp_bytes) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Pessimistic: useful compute time over the dominant term with
+        the *unfused upper-bound* memory term."""
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / bound if bound else 0.0
+
+    @property
+    def roofline_fraction_fused(self) -> float:
+        """Fused-pipeline estimate: memory term replaced by its lower
+        bound (resident bytes).  The achievable fraction on TPU lies
+        between `roofline_fraction` and this value, much nearer this one
+        for fusion-friendly stacks."""
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS
+        bound = max(self.t_compute, self.t_memory_lower, self.t_collective)
+        return t_useful / bound if bound else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "t_memory_lower_s": self.t_memory_lower,
+            "roofline_fraction_fused": self.roofline_fraction_fused,
+            "argument_bytes": self.argument_bytes,
+            "output_bytes": self.output_bytes,
+            "temp_bytes": self.temp_bytes,
+        }
+
+
+def model_flops_estimate(cfg, shape_kind: str, seq: int, batch: int,
+                         n_params_active: int, n_params_embed: int) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N per token (decode)."""
+    n = n_params_active - n_params_embed
+    tokens = seq * batch
+    if shape_kind == "train":
+        return 6.0 * n * tokens
+    if shape_kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * batch            # decode: one token per sequence
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+        argument_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+        output_bytes=int(getattr(ma, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+    )

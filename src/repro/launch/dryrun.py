@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds ShapeDtypeStruct stand-ins (weak-type-correct,
+sharded, zero allocation), jit-lowers the step function under the
+production mesh, compiles it, and records memory_analysis /
+cost_analysis / collective-traffic for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes]
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.configs.base import RunConfig, apply_tp_padding
+from repro.distributed.sharding import (default_axis_rules, make_batch_specs,
+                                        make_cache_specs, make_param_specs)
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, n_chips
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import model as mdl
+from repro.models.common import axis_rules
+from repro.optim import AdamWState
+
+
+def _struct_with(mesh, struct_tree, spec_tree):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        struct_tree, spec_tree)
+
+
+def _params_struct(cfg, dtype=jnp.bfloat16, scan_layers: bool = True):
+    return jax.eval_shape(
+        lambda: mdl.init_params(jax.random.key(0), cfg, dtype=dtype,
+                                scan_layers=scan_layers))
+
+
+def _serve_batch_struct(cfg, batch, seq):
+    full = mdl.batch_struct(cfg, batch, seq)
+    full.pop("labels")
+    return full
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               fsdp: bool = True, remat: str = "full",
+               sequence_parallel: bool = False, attn: str = "auto",
+               serving_spec: bool = False, microbatch: int = 0,
+               param_dtype=jnp.bfloat16, scan_layers: bool = True,
+               n_layers_override: Optional[int] = None,
+               mesh=None):
+    from repro.models.attention import set_attention_impl
+    set_attention_impl(attn)
+    """-> (jit_fn, example_structs, cfg, mesh) for one dry-run cell."""
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh_axis_sizes(mesh).get("model", 1)
+    cfg = apply_tp_padding(get_config(arch), tp)
+    if n_layers_override is not None:
+        over = {"n_layers": n_layers_override}
+        if cfg.is_encoder_decoder:
+            over["n_encoder_layers"] = n_layers_override
+        cfg = cfg.scaled(**over)
+    shape = SHAPES[shape_name]
+    rules = default_axis_rules(mesh, sequence_parallel=sequence_parallel,
+                               serving=serving_spec)
+
+    params = _params_struct(cfg, param_dtype, scan_layers)
+    pspecs = make_param_specs(params, cfg, mesh, fsdp=fsdp,
+                              serving=serving_spec)
+    params = _struct_with(mesh, params, pspecs)
+
+    if shape.kind == "train":
+        run = RunConfig(arch=arch, remat=remat, fsdp=fsdp,
+                        microbatch=microbatch)
+        opt = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(
+                                          mesh, jax.sharding.PartitionSpec())),
+            m=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32, sharding=s.sharding), params),
+            v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32, sharding=s.sharding), params),
+        )
+        batch = mdl.batch_struct(cfg, shape.global_batch, shape.seq_len)
+        bspecs = make_batch_specs(batch, mesh)
+        batch = _struct_with(mesh, batch, bspecs)
+        fn = make_train_step(cfg, run)
+        args = (params, opt, batch)
+    elif shape.kind == "prefill":
+        batch = _serve_batch_struct(cfg, shape.global_batch, shape.seq_len)
+        bspecs = make_batch_specs(batch, mesh)
+        batch = _struct_with(mesh, batch, bspecs)
+        cache = jax.eval_shape(lambda: mdl.init_decode_state(
+            cfg, shape.global_batch, shape.seq_len, scan_layers=scan_layers))
+        cspecs = make_cache_specs(cache, cfg, mesh)
+        cache = _struct_with(mesh, cache, cspecs)
+        fn = make_prefill_step(cfg)
+        args = (params, batch, cache)
+    else:  # decode
+        cache = jax.eval_shape(lambda: mdl.init_decode_state(
+            cfg, shape.global_batch, shape.seq_len, scan_layers=scan_layers))
+        cspecs = make_cache_specs(cache, cfg, mesh)
+        cache = _struct_with(mesh, cache, cspecs)
+        tok = mdl.batch_struct(cfg, shape.global_batch, 1)
+        tok.pop("labels")
+        tspecs = make_batch_specs(tok, mesh)
+        tok = _struct_with(mesh, tok, tspecs)
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(
+                                       mesh, jax.sharding.PartitionSpec()))
+        fn = make_decode_step(cfg)
+        args = (params, cache, tok["tokens"], pos)
+
+    return fn, args, cfg, mesh, rules, shape
+
+
+def _scan_corrected_costs(arch: str, shape_name: str, cfg, mesh, *,
+                          fsdp: bool, remat: str, sequence_parallel: bool,
+                          attn: str = "auto", serving_spec: bool = False,
+                          microbatch: int = 0):
+    """XLA's cost analysis counts a while-loop (scan) body ONCE, so scanned
+    stacks under-report FLOPs/bytes/collectives by ~reps x.  Correct with a
+    two-point fit: compile unrolled 1-rep and 2-rep variants; per-rep cost
+    is the delta and total = c1 + (reps-1) * (c2 - c1).
+
+    (For whisper the encoder scales alongside the decoder; its rep count
+    equals the decoder's, so the joint fit stays exact.)
+    """
+    from repro.models.transformer import stack_plan
+    prefix, reps, pattern, extra = stack_plan(cfg)
+    if reps <= 1:
+        return None
+    period, e = len(pattern), len(extra)
+    costs = []
+    for n in (prefix + period + e, prefix + 2 * period + e):
+        fn, args, c, m, rules, shape = build_cell(
+            arch, shape_name, multi_pod=False, fsdp=fsdp, remat=remat,
+            sequence_parallel=sequence_parallel, attn=attn,
+            serving_spec=serving_spec, microbatch=microbatch,
+            scan_layers=False, n_layers_override=n, mesh=mesh)
+        with jax.set_mesh(m), axis_rules(rules):
+            comp = jax.jit(fn).lower(*args).compile()
+        ca = comp.cost_analysis() or {}
+        coll = analysis.collective_bytes(comp.as_text())
+        costs.append((float(ca.get("flops", 0.0)),
+                      float(ca.get("bytes accessed", 0.0)), coll))
+    (f1, b1, c1), (f2, b2, c2) = costs
+    r = reps
+    flops = f1 + (r - 1) * max(f2 - f1, 0.0)
+    bytes_ = b1 + (r - 1) * max(b2 - b1, 0.0)
+    coll = {k: int(c1[k] + (r - 1) * max(c2[k] - c1[k], 0)) for k in c1}
+    return flops, bytes_, coll
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             fsdp: bool = True, remat: str = "full",
+             sequence_parallel: bool = False, attn: str = "auto",
+             serving_spec: bool = False, microbatch: int = 0,
+             verbose: bool = True) -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(arch, shape, cfg0)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "SKIP", "reason": reason}
+
+    t0 = time.time()
+    try:
+        fn, args, cfg, mesh, rules, shape = build_cell(
+            arch, shape_name, multi_pod=multi_pod, fsdp=fsdp, remat=remat,
+            sequence_parallel=sequence_parallel, attn=attn,
+            serving_spec=serving_spec, microbatch=microbatch)
+        with jax.set_mesh(mesh), axis_rules(rules):
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis: "
+                  f"args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+                  f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+                  f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+                  f"(per device)")
+            ca = compiled.cost_analysis()
+            print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis: "
+                  f"flops/dev={ca.get('flops', 0):.3e} "
+                  f"bytes/dev={ca.get('bytes accessed', 0):.3e}")
+
+            n_active = mdl.count_params_analytic(cfg, active_only=True)
+            # tied embeddings serve as the output head: their matmul is real
+            # per-token compute, so only subtract lookup-only tables.
+            n_embed = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+            mf = analysis.model_flops_estimate(
+                cfg, shape.kind, shape.seq_len, shape.global_batch,
+                n_active, n_embed)
+            rep = analysis.analyze(compiled, arch=arch, shape=shape_name,
+                                   mesh_name=mesh_name, chips=n_chips(mesh),
+                                   model_flops=mf)
+        corrected = _scan_corrected_costs(
+            arch, shape_name, cfg, mesh, fsdp=fsdp, remat=remat,
+            sequence_parallel=sequence_parallel, attn=attn,
+            serving_spec=serving_spec, microbatch=microbatch)
+        if corrected is not None:
+            rep.flops_per_device, rep.bytes_per_device, rep.coll_breakdown = corrected
+            rep.coll_bytes_per_device = float(sum(rep.coll_breakdown.values()))
+        row = rep.row()
+        row["scan_corrected"] = corrected is not None
+        row.update({"status": "OK", "t_lower_s": round(t_lower, 1),
+                    "t_compile_s": round(t_compile, 1),
+                    "fsdp": fsdp, "remat": remat, "sp": sequence_parallel,
+                    "attn": attn, "serving_spec": serving_spec,
+                    "microbatch": microbatch})
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] "
+                  f"t_comp={rep.t_compute*1e3:.2f}ms t_mem={rep.t_memory*1e3:.2f}ms "
+                  f"t_coll={rep.t_collective*1e3:.2f}ms "
+                  f"bottleneck={rep.bottleneck} "
+                  f"useful={rep.useful_flops_ratio:.2f} "
+                  f"roofline={rep.roofline_fraction:.3f}")
+        return row
+    except Exception as e:  # record failures: they are bugs to fix
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                "elapsed_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default="full", choices=("none", "dots", "full"))
+    ap.add_argument("--sp", action="store_true", help="sequence parallelism")
+    ap.add_argument("--attn", default="auto", choices=("auto", "chunked"))
+    ap.add_argument("--serving-spec", action="store_true",
+                    help="inference param layout: EP over data x model, no FSDP")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    results = []
+    for arch, shape, mp in cells:
+        row = run_cell(arch, shape, multi_pod=mp, fsdp=not args.no_fsdp,
+                       remat=args.remat, sequence_parallel=args.sp,
+                       attn=args.attn, serving_spec=args.serving_spec,
+                       microbatch=args.microbatch)
+        results.append(row)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row) + "\n")
+
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\ndry-run summary: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL "
+          f"of {len(results)} cells")
+    if n_fail:
+        for r in results:
+            if r["status"] == "FAIL":
+                print("  FAIL:", r["arch"], r["shape"], r["mesh"], r["error"])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

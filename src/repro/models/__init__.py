@@ -1,0 +1,11 @@
+from repro.models.model import (  # noqa: F401
+    count_params_analytic,
+    decode_step,
+    forward_train,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    make_batch,
+    batch_struct,
+    prefill,
+)

@@ -1,0 +1,209 @@
+"""Mixture-of-Experts block: capacity-gather dispatch (TPU/GSPMD-friendly).
+
+Dispatch is *gather-based*: per expert, the top-C tokens (by router priority)
+are gathered with integer indices, run through a grouped expert einsum, and
+scatter-added back.  Compared to the GShard one-hot dispatch einsum this
+keeps HLO FLOPs equal to ~capacity_factor x the active-expert FLOPs (the
+one-hot einsum costs O(group_size) more and would poison the roofline's
+useful-FLOPs ratio).  Tokens over capacity are dropped (standard GShard
+behaviour); tests use capacity_factor = E/k to make dispatch lossless and
+compare against the dense oracle below.
+
+Routing groups: tokens are grouped per batch row (seq >= 2), so expert
+selection and the gathers stay local to each data shard; single-token decode
+uses one group across the batch (a tiny global top-k).
+
+Expert-parallel sharding: the gathered (G, E, C, d) dispatch tensor and the
+expert weights shard E over the 'model' axis; each shard gathers its own
+experts' tokens from the (model-replicated) activations, so the only
+collective added by MoE is the output all-reduce — same shape as a
+megatron FFN all-reduce.
+
+Routers: softmax (qwen2-moe, + load-balance aux loss) and sigmoid with
+aux-loss-free bias balancing (deepseek-v3: the bias only affects top-k
+*selection*, gates use the raw sigmoid scores).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import activation, dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = common.split_keys(key, 8)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), in_axis=1, dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d, f), in_axis=1, dtype=dtype),
+        "w_down": dense_init(ks[3], (e, f, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.router_aux_free_bias:
+        p["router_bias"] = jnp.zeros((e,), jnp.float32)
+    if cfg.n_shared_experts:
+        fs = cfg.d_shared_expert
+        p["ws_gate"] = dense_init(ks[4], (d, fs), dtype=dtype)
+        p["ws_up"] = dense_init(ks[5], (d, fs), dtype=dtype)
+        p["ws_down"] = dense_init(ks[6], (fs, d), dtype=dtype)
+        if cfg.shared_expert_gate:
+            p["shared_gate"] = dense_init(ks[7], (d, 1), dtype=dtype)
+    return p
+
+
+def router_scores(p: Dict, x: jax.Array, cfg: ModelConfig
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (gates (..., E) fp32, selection_scores (..., E), logits)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    if cfg.router_type == "sigmoid":
+        gates = jax.nn.sigmoid(logits)
+        sel = gates + (p["router_bias"] if "router_bias" in p else 0.0)
+    else:
+        gates = jax.nn.softmax(logits, axis=-1)
+        sel = gates
+    return gates, sel, logits
+
+
+def _topk_mask(sel: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the per-token top-k experts.  sel: (..., E)."""
+    _, idx = jax.lax.top_k(sel, k)
+    return jax.nn.one_hot(idx, sel.shape[-1], dtype=bool).any(axis=-2)
+
+
+def load_balance_loss(gates: jax.Array, topk_mask: jax.Array, k: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e (fp32 scalar)."""
+    e = gates.shape[-1]
+    axes = tuple(range(topk_mask.ndim - 1))
+    f = jnp.mean(topk_mask.astype(jnp.float32), axis=axes)
+    pr = jnp.mean(gates, axis=axes)
+    return e * jnp.sum(f * pr) / k
+
+
+def _normalized_gates(gates: jax.Array, mask: jax.Array) -> jax.Array:
+    gsel = jnp.where(mask, gates, 0.0)
+    return gsel / jnp.maximum(gsel.sum(-1, keepdims=True), 1e-9)
+
+
+def _shard_dispatch(t: jax.Array) -> jax.Array:
+    """Constrain (G, E, C, d) dispatch tensors: G->batch, E->expert axis.
+
+    In the serving layout the expert axis is ('data','model'); the group
+    dim then stays unsharded (it is 1 in decode) so no mesh axis repeats.
+    """
+    r = common.current_rules()
+    if not r.enabled:
+        return t
+    from jax.sharding import PartitionSpec as P
+    batch = r.batch if r.batch else None
+    expert_axes = (r.expert if isinstance(r.expert, tuple)
+                   else ((r.expert,) if r.expert else ()))
+    if batch and any(a in expert_axes for a in batch):
+        batch = tuple(a for a in batch if a not in expert_axes) or None
+    try:
+        return jax.lax.with_sharding_constraint(
+            t, P(batch, r.expert, *([None] * (t.ndim - 2))))
+    except (ValueError, RuntimeError):
+        return t
+
+
+def moe_block(p: Dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-gather MoE.  x: (b, s, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # group per batch row; single-token decode gets one group over the batch
+    if s > 1:
+        g, gs = b, s
+    else:
+        g, gs = 1, b
+    xg = x.reshape(g, gs, d)
+
+    gates, sel, _ = router_scores(p, xg, cfg)             # (G, S, E)
+    mask = _topk_mask(sel, k)                             # (G, S, E)
+    aux = load_balance_loss(gates, mask, k)
+    gates_n = _normalized_gates(gates, mask)              # (G, S, E) fp32
+
+    cap = int(max(1, round(gs * k * cfg.moe_capacity_factor / e)))
+    cap = min(cap, gs)
+    # per-(group, expert) top-C token selection by router priority
+    prio = jnp.where(mask, sel, -jnp.inf)                 # (G, S, E)
+    prio = jnp.swapaxes(prio, 1, 2)                       # (G, E, S)
+    top_prio, tok_idx = jax.lax.top_k(prio, cap)          # (G, E, C)
+    slot_valid = jnp.isfinite(top_prio)
+    weight = jnp.take_along_axis(
+        jnp.swapaxes(gates_n, 1, 2), tok_idx, axis=2) * slot_valid  # (G,E,C)
+
+    # gather tokens: (G, E, C, d), E sharded over the expert axis
+    xd = jnp.take_along_axis(xg[:, None, :, :], tok_idx[..., None], axis=2)
+    xd = _shard_dispatch(xd)
+    act = activation(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", xd, p["w_gate"].astype(x.dtype))) * \
+        jnp.einsum("gecd,edf->gecf", xd, p["w_up"].astype(x.dtype))
+    yd = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    yd = _shard_dispatch(yd)
+    yd = yd * weight[..., None].astype(x.dtype)
+
+    gi = jnp.arange(g)[:, None, None]
+    out = jnp.zeros((g, gs, d), x.dtype).at[gi, tok_idx].add(
+        yd, mode="drop").reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        xt = x.reshape(-1, d)
+        hs = act(xt @ p["ws_gate"].astype(x.dtype)) * (xt @ p["ws_up"].astype(x.dtype))
+        hs = common.shard_ff(hs)
+        ys = hs @ p["ws_down"].astype(x.dtype)
+        if cfg.shared_expert_gate:
+            ys = ys * jax.nn.sigmoid(xt @ p["shared_gate"].astype(x.dtype))
+        out = out + ys.reshape(b, s, d)
+    return out, aux
+
+
+# --------------------------------------------------------------------------
+# Dense oracle (tests): exact per-token top-k expert computation
+# --------------------------------------------------------------------------
+
+def moe_block_dense(p: Dict, x: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Compute every expert for every token, combine top-k.  O(E) compute."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    gates, sel, _ = router_scores(p, xt, cfg)
+    mask = _topk_mask(sel, cfg.top_k)
+    aux = load_balance_loss(gates, mask, cfg.top_k)
+    gates_n = _normalized_gates(gates, mask)
+
+    act = activation(cfg.act)
+    h = act(jnp.einsum("nd,edf->enf", xt, p["w_gate"].astype(x.dtype))) * \
+        jnp.einsum("nd,edf->enf", xt, p["w_up"].astype(x.dtype))
+    y = jnp.einsum("enf,efd->end", h, p["w_down"].astype(x.dtype))
+    out = jnp.einsum("end,ne->nd", y, gates_n.astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        hs = act(xt @ p["ws_gate"].astype(x.dtype)) * (xt @ p["ws_up"].astype(x.dtype))
+        ys = hs @ p["ws_down"].astype(x.dtype)
+        if cfg.shared_expert_gate:
+            ys = ys * jax.nn.sigmoid(xt @ p["shared_gate"].astype(x.dtype))
+        out = out + ys
+    return out.reshape(b, s, d), aux
+
+
+def expert_load(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Fraction of tokens routed to each expert (for aux-free bias update)."""
+    gates, sel, _ = router_scores(p, x.reshape(-1, x.shape[-1]), cfg)
+    mask = _topk_mask(sel, cfg.top_k)
+    return jnp.mean(mask.astype(jnp.float32), axis=0)
+
+
+def update_router_bias(bias: jax.Array, load: jax.Array,
+                       rate: float = 0.001) -> jax.Array:
+    """DeepSeek aux-loss-free balancing: nudge under/over-loaded expert bias.
+
+    load: (E,) fraction of tokens routed to each expert this step.
+    """
+    target = jnp.mean(load)
+    return bias + rate * jnp.sign(target - load)

@@ -1,0 +1,160 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Full-sequence path uses a log-depth associative scan (also the shape the
+Pallas kernel `repro.kernels.rglru_scan` tiles into chunks); the sequential
+oracle lives in the kernel's ref.py.  Decode carries (h, conv_tail): O(1)
+per token — with the bounded local-attention window this is what makes
+recurrentgemma run the long_500k cell.
+
+Gate projections are block-diagonal with n_heads blocks, as in the
+reference implementation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init
+
+C_RGLRU = 8.0   # Griffin's fixed gate sharpness constant
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width
+    h = cfg.n_heads
+    bw = w // h
+    ks = common.split_keys(key, 8)
+    return {
+        "w_x": dense_init(ks[0], (d, w), dtype=dtype),        # x branch
+        "b_x": jnp.zeros((w,), dtype),
+        "w_y": dense_init(ks[1], (d, w), dtype=dtype),        # gate branch
+        "b_y": jnp.zeros((w,), dtype),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, w), dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # block-diagonal gate projections: (heads, bw, bw)
+        "w_input_gate": dense_init(ks[3], (h, bw, bw), in_axis=1, dtype=dtype),
+        "b_input_gate": jnp.zeros((h, bw), dtype),
+        "w_a_gate": dense_init(ks[4], (h, bw, bw), in_axis=1, dtype=dtype),
+        "b_a_gate": jnp.zeros((h, bw), dtype),
+        # Λ parameter: a = sigmoid(lam) in (0.9, 0.999) at init
+        "lam": jnp.log(jnp.expand_dims(
+            jnp.linspace(0.9, 0.999, w), 0)[0] /
+            (1 - jnp.linspace(0.9, 0.999, w))).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), dtype=dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def _gates(p: Dict, xb: jax.Array, h: int):
+    """Block-diagonal input/recurrence gates.  xb: (..., w)."""
+    shp = xb.shape
+    xh = xb.reshape(*shp[:-1], h, shp[-1] // h)
+    gi = jnp.einsum("...hk,hkj->...hj", xh, p["w_input_gate"].astype(xb.dtype))
+    gi = jax.nn.sigmoid(gi + p["b_input_gate"].astype(xb.dtype))
+    ga = jnp.einsum("...hk,hkj->...hj", xh, p["w_a_gate"].astype(xb.dtype))
+    ga = jax.nn.sigmoid(ga + p["b_a_gate"].astype(xb.dtype))
+    return gi.reshape(shp), ga.reshape(shp)
+
+
+def rglru_coeffs(p: Dict, xb: jax.Array, h: int):
+    """-> (a, gated_input) with h_t = a_t * h_{t-1} + sqrt(1-a_t^2)*i_t*x_t."""
+    gi, ga = _gates(p, xb, h)
+    log_a = -C_RGLRU * ga.astype(jnp.float32) * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    inp = mult * (gi.astype(jnp.float32) * xb.astype(jnp.float32))
+    return a, inp
+
+
+def lru_scan(a: jax.Array, x: jax.Array, h0: jax.Array | None = None
+             ) -> jax.Array:
+    """Linear recurrence h_t = a_t h_{t-1} + x_t via associative scan.
+
+    a, x: (b, s, w) fp32.  h0: (b, w) optional initial state.
+    """
+    if h0 is not None:
+        # fold h0 into the first step: x_0' = x_0 + a_0 * h0
+        x = x.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def rglru_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                h0=None, conv_state=None, use_kernel: bool = False
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence recurrent block.  x: (b, s, d) (already normed).
+
+    Returns (out, final_h, conv_tail).
+    """
+    b, s, _ = x.shape
+    w = cfg.lru_width
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype)) + p["b_x"].astype(x.dtype)
+    yb = jnp.einsum("bsd,dw->bsw", x, p["w_y"].astype(x.dtype)) + p["b_y"].astype(x.dtype)
+    yb = jax.nn.gelu(yb, approximate=True)
+
+    # causal depthwise conv on the x branch
+    k = cfg.ssm_conv
+    if conv_state is None:
+        padded = jnp.pad(xb, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        padded = jnp.concatenate([conv_state.astype(xb.dtype), xb], axis=1)
+    conv_tail = padded[:, padded.shape[1] - (k - 1):, :]
+    xc = sum(padded[:, i: i + s, :] * p["conv_w"].astype(xb.dtype)[i]
+             for i in range(k)) + p["conv_b"].astype(xb.dtype)
+
+    a, inp = rglru_coeffs(p, xc, cfg.n_heads)
+    if use_kernel:
+        from repro.kernels import ops
+        h = ops.rglru_scan(a, inp, h0)
+    else:
+        h = lru_scan(a, inp, h0)
+    final_h = h[:, -1]
+    out = (h.astype(x.dtype) * yb)
+    out = common.shard_ff(out)
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(x.dtype))
+    out = out + p["b_out"].astype(x.dtype)
+    return out, final_h, conv_tail
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_prefill(p: Dict, x: jax.Array, cfg: ModelConfig, cache: Dict
+                  ) -> Tuple[jax.Array, Dict]:
+    out, final_h, conv_tail = rglru_block(
+        p, x, cfg, h0=cache["h"], conv_state=None)
+    return out, {"h": final_h,
+                 "conv": conv_tail.astype(cache["conv"].dtype)}
+
+
+def rglru_decode(p: Dict, x: jax.Array, cfg: ModelConfig, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """Single-token step.  x: (b, 1, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype)) + p["b_x"].astype(x.dtype)
+    yb = jnp.einsum("bsd,dw->bsw", x, p["w_y"].astype(x.dtype)) + p["b_y"].astype(x.dtype)
+    yb = jax.nn.gelu(yb, approximate=True)
+
+    window = jnp.concatenate([cache["conv"].astype(xb.dtype), xb], axis=1)
+    xc = jnp.einsum("bkw,kw->bw", window, p["conv_w"].astype(xb.dtype))
+    xc = (xc + p["conv_b"].astype(xb.dtype))[:, None, :]
+
+    a, inp = rglru_coeffs(p, xc, cfg.n_heads)
+    h = a[:, 0] * cache["h"] + inp[:, 0]
+    out = (h[:, None, :].astype(x.dtype) * yb)
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(x.dtype))
+    out = out + p["b_out"].astype(x.dtype)
+    return out, {"h": h, "conv": window[:, 1:].astype(cache["conv"].dtype)}

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+from repro.optim.compression import (  # noqa: F401
+    compress_grads,
+    init_error_feedback,
+)

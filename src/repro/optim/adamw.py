@@ -1,0 +1,87 @@
+"""Sharded AdamW with fp32 moments, global-norm clipping, cosine schedule.
+
+Optimizer state shards exactly like the parameters (the ZeRO-3 property
+falls out of FSDP param specs: m/v inherit the same PartitionSpecs).
+Norm/bias/scalar parameters are excluded from weight decay.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: Any                   # fp32 pytree like params
+    v: Any
+
+
+def init_opt_state(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(step: jax.Array, run: RunConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(run.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - run.warmup_steps) /
+                 jnp.maximum(run.total_steps - run.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * t))
+    return run.learning_rate * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _decay_mask(params):
+    """True where weight decay applies (>=2D weights)."""
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def adamw_update(params, grads, state: AdamWState, run: RunConfig
+                 ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, run)
+    b1, b2, eps = run.beta1, run.beta2, 1e-8
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    def upd(p, g, m, v, wd):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if wd:
+            delta = delta + run.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_wd = jax.tree.leaves(mask)
+    outs = [upd(p, g, m, v, wd) for p, g, m, v, wd in
+            zip(flat_p, flat_g, flat_m, flat_v, flat_wd)]
+    new_p = tree.unflatten([o[0] for o in outs])
+    new_m = tree.unflatten([o[1] for o in outs])
+    new_v = tree.unflatten([o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,51 @@
+"""Gradient compression with error feedback (cross-pod all-reduce trick).
+
+int8 stochastic-rounding quantisation with per-tensor scale + an error
+feedback accumulator (residual carried to the next step), the standard
+recipe for compressed data-parallel reductions.  On real hardware this
+pairs with a DCN-aware collective (compress -> cross-pod all-reduce ->
+decompress); under ``jit`` we apply it to the gradient pytree, which
+simulates the numerics exactly and the dry-run records the traffic saving
+in §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jax.Array, key) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    scaled = x / scale
+    noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error: Any, key) -> Tuple[Any, Any, jax.Array]:
+    """-> (decompressed grads, new error feedback, compression ratio)."""
+    leaves, tree = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error)
+    keys = jax.random.split(key, len(leaves))
+    outs, new_err = [], []
+    raw_bits = comp_bits = 0
+    for g, e, k in zip(leaves, err_leaves, keys):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(g32, k)
+        deq = _dequantize(q, scale)
+        outs.append(deq.astype(g.dtype))
+        new_err.append(g32 - deq)
+        raw_bits += g.size * 32
+        comp_bits += g.size * 8 + 32
+    ratio = jnp.asarray(raw_bits / max(comp_bits, 1), jnp.float32)
+    return tree.unflatten(outs), tree.unflatten(new_err), ratio

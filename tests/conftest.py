@@ -1,0 +1,16 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def sage(tmp_path):
+    """Fresh Clovis stack per test (own ADDB, no throttling)."""
+    from repro.core.addb import Addb
+    from repro.core.clovis import Clovis
+
+    return Clovis(tmp_path / "sage", addb=Addb(), devices_per_tier=3)

@@ -1,0 +1,123 @@
+"""End-to-end system behaviour: train -> checkpoint -> kill -> restart ->
+loss continuity, with the full SAGE substrate engaged."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import TokenLoader, build_synthetic_corpus
+from repro.launch.train import Trainer
+
+
+def _mk_trainer(tmp_path, arch="qwen2.5-32b", **run_kw):
+    cfg = get_smoke_config(arch).scaled(dtype="float32")
+    run = RunConfig(arch=arch, total_steps=30, warmup_steps=3,
+                    checkpoint_every=10, remat="none", **run_kw)
+    tr = Trainer(cfg, run, tmp_path / "run")
+    build_synthetic_corpus(tr.clovis, vocab=cfg.vocab_real, n_shards=2,
+                           tokens_per_shard=4096)
+    return cfg, run, tr
+
+
+def test_train_reduces_loss(tmp_path):
+    cfg, run, tr = _mk_trainer(tmp_path)
+    loader = TokenLoader(tr.clovis, batch=4, seq=32)
+    try:
+        _, _, hist = tr.train(30, loader, log_every=5)
+    finally:
+        loader.close()
+        tr.ckpt.close()
+    losses = [l for _, l in hist]
+    assert losses[-1] < losses[0], f"no learning: {losses}"
+    assert np.isfinite(losses).all()
+
+
+def test_restart_resumes_step_and_state(tmp_path):
+    cfg, run, tr = _mk_trainer(tmp_path)
+    loader = TokenLoader(tr.clovis, batch=4, seq=32)
+    try:
+        tr.train(20, loader, log_every=10)
+    finally:
+        loader.close()
+        tr.ckpt.close()
+
+    # "restart": new trainer over the same storage root
+    tr2 = Trainer(cfg, run, tmp_path / "run")
+    got = tr2.try_restore()
+    assert got is not None
+    step, params, opt = got
+    assert step == 20
+    assert int(opt.step) == 20
+    loader2 = TokenLoader(tr2.clovis, batch=4, seq=32, start_step=step)
+    try:
+        _, _, hist = tr2.train(25, loader2, start_step=step, params=params,
+                               opt_state=opt, log_every=5)
+    finally:
+        loader2.close()
+        tr2.ckpt.close()
+    assert hist[-1][0] == 25
+
+
+def test_training_with_grad_compression(tmp_path):
+    """int8 error-feedback compression still trains."""
+    from repro.models import model as mdl
+    from repro.optim import (adamw_update, compress_grads,
+                             init_error_feedback, init_opt_state)
+
+    cfg = get_smoke_config("internlm2-20b").scaled(dtype="float32")
+    run = RunConfig(total_steps=20, warmup_steps=2, learning_rate=1e-3)
+    params = mdl.init_params(jax.random.key(0), cfg, dtype=jnp.float32)
+    opt = init_opt_state(params)
+    err = init_error_feedback(params)
+    batch = mdl.make_batch(jax.random.key(1), cfg, 4, 32)
+
+    @jax.jit
+    def step(params, opt, err, key):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: mdl.loss_fn(p, batch, cfg), has_aux=True)(params)
+        grads, err, ratio = compress_grads(grads, err, key)
+        params, opt, _ = adamw_update(params, grads, opt, run)
+        return params, opt, err, loss, ratio
+
+    losses = []
+    for i in range(15):
+        params, opt, err, loss, ratio = step(params, opt, err,
+                                             jax.random.key(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert 3.5 < float(ratio) < 4.5        # int8: ~4x traffic reduction
+
+
+def test_ha_failure_during_training_survives(tmp_path):
+    """Kill a checkpoint-tier device mid-run; mirrored layouts + HA keep
+    checkpoints restorable."""
+    cfg, run, tr = _mk_trainer(tmp_path, checkpoint_strategy="collective")
+    loader = TokenLoader(tr.clovis, batch=4, seq=32)
+    try:
+        tr.train(10, loader, log_every=10)
+        dev = tr.clovis.pools["t1_nvram"].devices[0]
+        tr.ha.engage_repair(dev.name)          # device dies, HA repairs
+        tr.train(20, loader, start_step=10, log_every=10)
+    finally:
+        loader.close()
+        tr.ckpt.close()
+
+    tr2 = Trainer(cfg, run, tmp_path / "run")
+    got = tr2.try_restore()
+    assert got is not None and got[0] == 20
+    tr2.ckpt.close()
+
+
+def test_addb_telemetry_collected(tmp_path):
+    cfg, run, tr = _mk_trainer(tmp_path)
+    loader = TokenLoader(tr.clovis, batch=4, seq=32)
+    try:
+        tr.train(10, loader, log_every=10)
+    finally:
+        loader.close()
+        tr.ckpt.close()
+    rep = tr.clovis.addb_report()
+    assert rep.get("put", {}).get("bytes", 0) > 0
+    assert rep.get("get", {}).get("bytes", 0) > 0
