@@ -1,0 +1,15 @@
+# Single-command entry points (tier-1 verify + benchmarks).
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-percipience
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	$(PYTHON) -m benchmarks.run --quick
+
+bench-percipience:
+	$(PYTHON) -m benchmarks.run --only percipience

@@ -16,13 +16,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=("stream", "dht", "checkpoint", "streams",
-                             "clovis"))
+                             "clovis", "percipience"))
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes for CI-speed runs")
     args = ap.parse_args()
 
     from benchmarks import (bench_checkpoint, bench_clovis, bench_dht,
-                            bench_stream_windows, bench_streams)
+                            bench_percipience, bench_stream_windows,
+                            bench_streams)
 
     suites = {
         # paper Fig. 3: STREAM bandwidth, memory vs storage windows
@@ -40,6 +41,9 @@ def main() -> None:
             producer_counts=(4, 16) if args.quick else (4, 16, 64)),
         # §3.2: Clovis op + function-shipping microbenches
         "clovis": bench_clovis.run,
+        # percipience loop: prefetch hit-rate / latency vs reactive HSM
+        "percipience": lambda: bench_percipience.run(
+            n_reads=200 if args.quick else 400),
     }
     chosen = [args.only] if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -11,12 +11,18 @@ Layers, bottom-up (paper Fig. 2):
   storage_window — PGAS I/O (MPI storage windows analogue)
   streams        — MPIStream analogue (I/O offload)
   addb / fdmi    — telemetry and plugin bus
+
+One layer lives above this package: repro.percipience closes the
+telemetry→prediction→action loop (heat scoring, prefetch, learned tier
+placement); its names are re-exported here lazily (PEP 562) so
+``from repro.core import Prefetcher`` works without an import cycle.
 """
 from repro.core.addb import Addb, GLOBAL_ADDB  # noqa: F401
 from repro.core.clovis import Clovis, ClovisIndex  # noqa: F401
 from repro.core.function_shipping import FunctionShipper  # noqa: F401
 from repro.core.ha import FailureEvent, HAMonitor  # noqa: F401
-from repro.core.hsm import HsmDaemon, HsmPolicy, recommend_tier  # noqa: F401
+from repro.core.hsm import (CountingScorer, HsmDaemon, HsmPolicy,  # noqa: F401
+                            recommend_tier)
 from repro.core.layouts import Layout, DEFAULT_LAYOUTS  # noqa: F401
 from repro.core.object_store import ObjectStore  # noqa: F401
 from repro.core.storage_window import (MemoryWindow, StorageWindow,  # noqa: F401
@@ -26,3 +32,15 @@ from repro.core.tiers import (DeviceModel, TierDevice, TierPool,  # noqa: F401
                               make_tier_pools)
 from repro.core.transactions import (Transaction, TransactionManager,  # noqa: F401
                                      WriteAheadLog)
+
+_PERCIPIENCE_NAMES = ("FeatureExtractor", "Prefetcher", "PercipientPolicy",
+                      "attach_percipience", "heat_scores", "markov_predict")
+
+
+def __getattr__(name):
+    # lazy re-export: repro.percipience imports repro.core submodules, so
+    # an eager import here would cycle
+    if name in _PERCIPIENCE_NAMES:
+        import repro.percipience as _p
+        return getattr(_p, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

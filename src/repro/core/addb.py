@@ -41,7 +41,10 @@ class Addb:
             self._records.append(rec)
             subs = list(self._subscribers)
         for fn in subs:
-            fn(rec)
+            try:
+                fn(rec)
+            except Exception:
+                pass   # subscribers must not break the I/O path
 
     def subscribe(self, fn: Callable[[AddbRecord], None]):
         with self._lock:
@@ -53,6 +56,30 @@ class Addb:
         if op:
             recs = [r for r in recs if r.op == op]
         return recs
+
+    def window(self, since_s: float, op: Optional[str] = None
+               ) -> List[AddbRecord]:
+        """Records from the trailing ``since_s`` seconds (newest last)."""
+        cutoff = time.time() - since_s
+        return [r for r in self.records(op) if r.ts >= cutoff]
+
+    def to_arrays(self, since_s: Optional[float] = None,
+                  op: Optional[str] = None) -> Dict[str, "np.ndarray"]:
+        """Columnar view of (optionally time-windowed) records as numpy
+        arrays — the percipience feature extractor and benchmark reports
+        consume this instead of iterating AddbRecord objects."""
+        import numpy as np
+        recs = (self.window(since_s, op) if since_s is not None
+                else self.records(op))
+        return {
+            "ts": np.array([r.ts for r in recs], np.float64),
+            "op": np.array([r.op for r in recs], dtype=object),
+            "entity": np.array([r.entity for r in recs], dtype=object),
+            "device": np.array([r.device for r in recs], dtype=object),
+            "nbytes": np.array([r.nbytes for r in recs], np.int64),
+            "latency_s": np.array([r.latency_s for r in recs], np.float64),
+            "ok": np.array([r.ok for r in recs], bool),
+        }
 
     # ---- aggregations (ARM-Forge-style performance report) ----
 

@@ -222,6 +222,14 @@ class Clovis:
     def migrate(self, oid: str, layout: lay.Layout):
         self.store.migrate(oid, layout)
 
+    def enable_percipience(self, **kw):
+        """Wire the percipience loop (feature extraction, prefetch,
+        learned placement) onto this stack; see
+        repro.percipience.attach_percipience for knobs.
+        Returns (extractor, prefetcher, policy)."""
+        from repro.percipience import attach_percipience
+        return attach_percipience(self, **kw)
+
 
 def _dtype_name(dt) -> str:
     try:

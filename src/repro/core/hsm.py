@@ -32,12 +32,42 @@ class HsmPolicy:
     demote_layout_kind: str = lay.PARITY
 
 
-class HsmDaemon:
-    """Single-shot or background-thread migration engine."""
+PROMOTE = "promote"
+DEMOTE = "demote"
 
-    def __init__(self, store: ObjectStore, policy: Optional[HsmPolicy] = None):
+
+class CountingScorer:
+    """Default promote/demote decision: raw recent-access counts against
+    the HsmPolicy thresholds (the daemon's historical behaviour)."""
+
+    def __init__(self, policy: HsmPolicy):
+        self.policy = policy
+
+    def decide(self, meta, now: float) -> Optional[str]:
+        pol = self.policy
+        age = now - meta.last_access
+        if (meta.access_count >= pol.hot_access_count
+                and age <= pol.hot_window_s):
+            return PROMOTE
+        if age >= pol.cold_age_s:
+            return DEMOTE
+        return None
+
+
+class HsmDaemon:
+    """Single-shot or background-thread migration engine.
+
+    Scoring is pluggable: ``scorer`` is any object with
+    ``decide(meta, now) -> "promote" | "demote" | None``; the default
+    CountingScorer reproduces the original raw-count/watermark policy,
+    while percipience.PercipientPolicy substitutes predicted heat.
+    """
+
+    def __init__(self, store: ObjectStore, policy: Optional[HsmPolicy] = None,
+                 scorer=None):
         self.store = store
         self.policy = policy or HsmPolicy()
+        self.scorer = scorer or CountingScorer(self.policy)
         self.migrations: List[Tuple[str, str, str]] = []   # (oid, from, to)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -82,17 +112,13 @@ class HsmDaemon:
             if meta.attrs.get("pinned"):
                 continue
             tier = meta.layout.tier
-            age = now - meta.last_access
-            hot = (meta.access_count >= pol.hot_access_count
-                   and age <= pol.hot_window_s)
-            cold = age >= pol.cold_age_s
-            if hot:
+            decision = self.scorer.decide(meta, now)
+            if decision == PROMOTE:
                 up = self._tier_up(tier)
                 if up is not None:
                     self._migrate(oid, up, pol.promote_layout_kind)
                     n += 1
-                    continue
-            if cold:
+            elif decision == DEMOTE:
                 down = self._tier_down(tier)
                 if down is not None:
                     self._migrate(oid, down, pol.demote_layout_kind)

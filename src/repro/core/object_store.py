@@ -71,6 +71,7 @@ class ObjectStore:
         self._meta: Dict[str, ObjectMeta] = {}
         self._containers: Dict[str, Dict[str, Any]] = {"default": {}}
         self._fdmi: List[Callable[[str, str, Dict], None]] = []
+        self._read_hooks: List[Callable[[str, int], None]] = []
         self._lock = threading.RLock()
         self._load_meta()
         self.recover()
@@ -108,6 +109,19 @@ class ObjectStore:
                 fn(event, oid, info or {})
             except Exception:
                 pass   # plugins must not break the store
+
+    def register_read_hook(self, fn: Callable[[str, int], None]):
+        """fn(oid, nbytes) after every demand read — the percipience
+        prefetcher and feature extractor observe the access stream here.
+        Internal reads (migration, repair) do not fire hooks."""
+        self._read_hooks.append(fn)
+
+    def _notify_read(self, oid: str, nbytes: int):
+        for fn in list(self._read_hooks):
+            try:
+                fn(oid, nbytes)
+            except Exception:
+                pass   # observers must not break the read path
 
     # ------------------------------------------------------------------
     # placement
@@ -274,14 +288,16 @@ class ObjectStore:
             pdev.write_block(self._block_key(meta.oid, version, gidx,
                                              parity=True), parity)
 
-    def _read_block(self, meta: ObjectMeta, idx: int, version: int) -> bytes:
+    def _read_block(self, meta: ObjectMeta, idx: int, version: int,
+                    record: bool = True) -> bytes:
         last_err: Optional[Exception] = None
         for dev, key in self._placements(meta, idx, version):
             try:
                 t0 = time.time()
                 blk = dev.read_block(key)
-                self.addb.record("get", meta.oid, dev.name, len(blk),
-                                 time.time() - t0)
+                if record:
+                    self.addb.record("get", meta.oid, dev.name, len(blk),
+                                     time.time() - t0)
                 if idx in meta.checksums and zlib.crc32(blk) != meta.checksums[idx]:
                     raise IOError(f"checksum mismatch {meta.oid}[{idx}]")
                 return blk
@@ -378,16 +394,34 @@ class ObjectStore:
                                   "append": True})
 
     def read(self, oid: str, start_block: int = 0,
-             nblocks: Optional[int] = None) -> bytes:
+             nblocks: Optional[int] = None, _notify: bool = True) -> bytes:
+        """Read blocks.  ``_notify=False`` marks an internal read
+        (migration): no read hooks, no ADDB records, no access-count /
+        last-access bookkeeping — internal traffic must not register as
+        demand access or it feeds back into percipience heat scoring.
+        """
         meta = self._meta[oid]
         if nblocks is None:
             nblocks = meta.nblocks - start_block
-        out = bytearray()
-        for i in range(start_block, start_block + nblocks):
-            out += self._read_block(meta, i, meta.version)
-        with self._lock:
-            meta.last_access = time.time()
-            meta.access_count += 1
+        last_err: Optional[IOError] = None
+        for _attempt in range(2):
+            # one retry: a concurrent migration may bump meta.version
+            # mid-read; the second pass sees the settled version
+            try:
+                out = bytearray()
+                for i in range(start_block, start_block + nblocks):
+                    out += self._read_block(meta, i, meta.version,
+                                            record=_notify)
+                break
+            except IOError as e:
+                last_err = e
+        else:
+            raise last_err
+        if _notify:
+            with self._lock:
+                meta.last_access = time.time()
+                meta.access_count += 1
+            self._notify_read(oid, len(out))
         return bytes(out)
 
     def read_size(self, oid: str) -> int:
@@ -444,7 +478,7 @@ class ObjectStore:
     def migrate(self, oid: str, new_layout: lay.Layout):
         """Move an object to a different tier/layout (HSM)."""
         meta = self._meta[oid]
-        data = self.read(oid)
+        data = self.read(oid, _notify=False)   # internal read, not a demand access
         old_layout, old_version = meta.layout, meta.version
         with self._lock:
             meta.layout = new_layout

@@ -29,7 +29,8 @@ from repro.configs.base import RunConfig, apply_tp_padding
 from repro.distributed.sharding import (default_axis_rules, make_batch_specs,
                                         make_cache_specs, make_param_specs)
 from repro.launch import analysis
-from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, n_chips
+from repro.launch.mesh import (make_production_mesh, mesh_axis_sizes,
+                               mesh_context, n_chips)
 from repro.launch.steps import (make_decode_step, make_prefill_step,
                                 make_train_step)
 from repro.models import model as mdl
@@ -153,7 +154,7 @@ def _scan_corrected_costs(arch: str, shape_name: str, cfg, mesh, *,
             sequence_parallel=sequence_parallel, attn=attn,
             serving_spec=serving_spec, microbatch=microbatch,
             scan_layers=False, n_layers_override=n, mesh=mesh)
-        with jax.set_mesh(m), axis_rules(rules):
+        with mesh_context(m), axis_rules(rules):
             comp = jax.jit(fn).lower(*args).compile()
         ca = comp.cost_analysis() or {}
         coll = analysis.collective_bytes(comp.as_text())
@@ -186,7 +187,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             arch, shape_name, multi_pod=multi_pod, fsdp=fsdp, remat=remat,
             sequence_parallel=sequence_parallel, attn=attn,
             serving_spec=serving_spec, microbatch=microbatch)
-        with jax.set_mesh(mesh), axis_rules(rules):
+        with mesh_context(mesh), axis_rules(rules):
             lowered = jax.jit(fn).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()

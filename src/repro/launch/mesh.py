@@ -9,21 +9,40 @@ single CPU device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                      # jax >= 0.5 explicit/auto axis types
+    from jax.sharding import AxisType
+except ImportError:       # older jax: make_mesh has no axis_types kwarg
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; 2 pods for the multi-pod dry run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over local devices (tests / CPU examples)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """Context manager activating ``mesh``: jax.set_mesh on new jax; the
+    Mesh object's own context manager (global physical mesh) on older
+    jax, where with_sharding_constraint(PartitionSpec) resolves against
+    the ambient mesh the same way."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def mesh_axis_sizes(mesh) -> dict:

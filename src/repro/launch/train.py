@@ -29,7 +29,7 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.base import RunConfig
 from repro.core import Clovis, HAMonitor
 from repro.data.pipeline import TokenLoader, build_synthetic_corpus
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.launch.steps import make_train_step
 from repro.models import model as mdl
 from repro.models.common import axis_rules
@@ -92,7 +92,7 @@ class Trainer:
         err_fb = (init_error_feedback(params)
                   if self.run.grad_compression == "int8" else None)
         history = []
-        with jax.set_mesh(self.mesh), axis_rules(self.rules):
+        with mesh_context(self.mesh), axis_rules(self.rules):
             step = start_step
             t_last = time.time()
             while step < steps:

@@ -73,6 +73,7 @@ from repro.distributed.sharding import (default_axis_rules, make_batch_specs,
 from repro.launch.steps import make_decode_step, make_train_step
 from repro.models import model as mdl
 from repro.models.common import axis_rules
+from repro.launch.mesh import mesh_context
 from repro.optim import AdamWState
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -99,9 +100,12 @@ batch = mdl.batch_struct(cfg, 8, 32)
 batch = withsh(batch, make_batch_specs(batch, mesh))
 
 run = RunConfig(remat="full")
-with jax.set_mesh(mesh), axis_rules(rules):
+with mesh_context(mesh), axis_rules(rules):
     c1 = jax.jit(make_train_step(cfg, run)).lower(params, opt, batch).compile()
-    print("TRAIN_COMPILED", int(c1.cost_analysis().get("flops", 0)) > 0)
+    ca = c1.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0]
+    print("TRAIN_COMPILED", int(ca.get("flops", 0)) > 0)
 
     cache = jax.eval_shape(lambda: mdl.init_decode_state(cfg, 8, 64))
     cache = withsh(cache, make_cache_specs(cache, cfg, mesh))
@@ -129,6 +133,7 @@ from repro.distributed.sharding import (default_axis_rules, make_batch_specs,
                                         make_param_specs)
 from repro.models import model as mdl
 from repro.models.common import axis_rules
+from repro.launch.mesh import mesh_context
 
 cfg = apply_tp_padding(get_smoke_config("internlm2-20b").scaled(
     dtype="float32", n_heads=4, n_kv_heads=2), 2)
@@ -143,7 +148,7 @@ params_sh = jax.device_put(params, jax.tree.map(
     lambda s: NamedSharding(mesh, s), pspecs))
 batch_sh = jax.device_put(batch, jax.tree.map(
     lambda s: NamedSharding(mesh, s), make_batch_specs(batch, mesh)))
-with jax.set_mesh(mesh), axis_rules(rules):
+with mesh_context(mesh), axis_rules(rules):
     loss_sh, _ = jax.jit(lambda p, b: mdl.loss_fn(p, b, cfg))(params_sh, batch_sh)
 np.testing.assert_allclose(float(loss_single), float(loss_sh), rtol=2e-5)
 print("NUMERICS_MATCH", float(loss_single), float(loss_sh))

@@ -11,10 +11,10 @@ def test_pipeline_matches_sequential():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.distributed.pipeline import pipeline_forward, split_stages
+from repro.launch.mesh import _make_mesh
 
-mesh = jax.make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
+mesh = _make_mesh((4,), ("stage",))
 reps, d = 8, 16
 key = jax.random.key(0)
 params = {"w": jax.random.normal(key, (reps, d, d)) * 0.2,

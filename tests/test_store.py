@@ -1,13 +1,11 @@
 """SAGE object store / Clovis tests: layouts, transactions, HA, HSM,
-function shipping, plus hypothesis property tests on the KV index and
-block-round-trip invariants."""
-import itertools
+function shipping.  Hypothesis property tests on the KV index and
+block-round-trip invariants live in test_store_properties.py (skipped
+when hypothesis is absent)."""
 import json
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
 
 from repro.core import (Clovis, FailureEvent, FunctionShipper, HAMonitor,
                         HsmDaemon, Layout, recommend_tier)
@@ -223,57 +221,3 @@ def test_fdmi_plugins(sage):
     assert comp.ratios.get("p/1", 0) > 10        # zeros compress well
     assert integ.scrub("plug") == []
     assert len(idx.index) >= 1
-
-
-# ---------------------------------------------------------------------------
-# property tests (hypothesis)
-# ---------------------------------------------------------------------------
-
-_IDX_COUNTER = itertools.count()
-
-
-@settings(max_examples=25, deadline=None,
-          suppress_health_check=[HealthCheck.function_scoped_fixture])
-@given(ops=st.lists(
-    st.tuples(st.sampled_from(["put", "del"]),
-              st.binary(min_size=1, max_size=8),
-              st.binary(max_size=16)),
-    max_size=40))
-def test_index_matches_model_dict(sage, ops):
-    """Clovis index == python dict under arbitrary PUT/DEL interleavings;
-    NEXT iterates in strict key order."""
-    idx = sage.index(f"prop{next(_IDX_COUNTER)}")
-    model = {}
-    for op, k, v in ops:
-        if op == "put":
-            idx.put({k: v}, persist=False)
-            model[k] = v
-        else:
-            idx.delete([k], persist=False)
-            model.pop(k, None)
-    keys = sorted(model)
-    assert idx.get(keys) == [model[k] for k in keys]
-    # NEXT walk reproduces sorted order
-    walk, cur = [], b""
-    while True:
-        nxt = idx.next([cur])[0]
-        if nxt is None:
-            break
-        walk.append(nxt[0])
-        cur = nxt[0]
-    assert walk == [k for k in keys if k > b""]
-
-
-@settings(max_examples=20, deadline=None,
-          suppress_health_check=[HealthCheck.function_scoped_fixture])
-@given(data=st.binary(min_size=1, max_size=4096),
-       bs_exp=st.integers(min_value=7, max_value=12),
-       kind=st.sampled_from([lay.STRIPED, lay.MIRRORED, lay.PARITY]))
-def test_object_roundtrip_any_layout(sage, data, bs_exp, kind):
-    oid = f"prop/{abs(hash((data[:8], bs_exp, kind))) % 10**9}"
-    if sage.exists(oid):
-        sage.delete(oid)
-    sage.create(oid, block_size=1 << bs_exp,
-                layout=Layout(kind, T2_FLASH, 2))
-    sage.put(oid, data)
-    assert sage.get(oid) == data
