@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-percipience
+.PHONY: test bench bench-percipience bench-analytics
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -13,3 +13,6 @@ bench:
 
 bench-percipience:
 	$(PYTHON) -m benchmarks.run --only percipience
+
+bench-analytics:
+	$(PYTHON) -m benchmarks.run --only analytics

@@ -1,0 +1,146 @@
+"""Analytics pushdown benchmark — bytes moved and modelled latency for
+in-storage query execution vs fetch-all (paper §4.1: 'move the
+computation to the data').
+
+Two workloads:
+
+  * filter+group-by over a container of row tables: pushdown ships the
+    fused filter→key_by→partial-sum fragment to the store and moves only
+    per-partition partials; fetch-all moves every raw byte and computes
+    caller-side.  Both must produce the numpy reference answer, and the
+    Pallas segmented-reduce kernel must match the numpy reference
+    *exactly* on the integer aggregate.
+  * windowed aggregation over a live stream drained through StreamTap.
+
+Modelled latency uses the tier device models for the storage-side scan
+(identical in both modes) plus a modelled caller interconnect
+(NET_BW/NET_LAT) for whatever crosses: the pushdown win is the moved-
+bytes reduction, exactly the paper's Fig. 2 arrow from compute-side to
+storage-side analytics.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_clovis, timeit
+from repro.analytics import col
+from repro.analytics import kernels as K
+from repro.core import StreamContext, StreamTap
+from repro.core.tiers import DEFAULT_MODELS
+
+NET_BW = 1e9          # caller interconnect bytes/s
+NET_LAT = 50e-6       # per-partition RPC latency
+
+
+def _populate(clovis, n_objects: int, rows: int, seed: int = 0
+              ) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    arrs = []
+    for i in range(n_objects):
+        a = np.empty((rows, 4), np.int32)
+        a[:, 0] = rng.integers(0, 16, rows)       # group key
+        a[:, 1] = rng.integers(0, 100, rows)      # filter column
+        a[:, 2] = rng.integers(-1000, 1000, rows)  # value
+        a[:, 3] = i
+        clovis.put_array(f"tbl/{i:03d}", a, container="tbl")
+        arrs.append(a)
+    return np.vstack(arrs)
+
+
+def _modelled_latency_s(clovis, container: str, bytes_moved: int) -> float:
+    """Tier-model scan of every partition + interconnect transfer of
+    whatever crosses to the caller."""
+    t = 0.0
+    for oid in clovis.container(container):
+        meta = clovis.store.meta(oid)
+        m = DEFAULT_MODELS[meta.layout.tier]
+        size = clovis.store.read_size(oid)
+        t += m.latency + size / m.read_bw
+        t += NET_LAT
+    return t + bytes_moved / NET_BW
+
+
+def bench_filter_groupby(n_objects: int, rows: int) -> None:
+    clovis = fresh_clovis("analytics")
+    allr = _populate(clovis, n_objects, rows)
+
+    query = (lambda eng: eng.scan("tbl").filter(col(1) > 50)
+             .key_by(col(0)).aggregate("sum", value=col(2)))
+
+    push = clovis.analytics()
+    fetch = clovis.analytics(pushdown=False)
+    rp = push.run(query(push))
+    rf = fetch.run(query(fetch))
+
+    # ---- correctness: pushdown == fetch-all == numpy reference ----
+    m = allr[allr[:, 1] > 50]
+    wk = np.unique(m[:, 0])
+    wv = np.array([m[m[:, 0] == k][:, 2].sum() for k in wk])
+    for tag, (k, v) in (("pushdown", rp.value), ("fetch-all", rf.value)):
+        if not ((k == wk).all() and (v == wv).all()):
+            raise AssertionError(f"{tag} result != numpy reference")
+
+    # ---- kernel vs numpy reference: exact on integer aggregates ----
+    keys, inv = np.unique(m[:, 0].astype(np.int64), return_inverse=True)
+    kern = K.segment_reduce(m[:, 2], inv, len(keys), op="sum",
+                            interpret=True)
+    ref = K.segment_reduce_ref(m[:, 2], inv, len(keys), op="sum")
+    if not (kern == ref).all():
+        raise AssertionError("Pallas kernel != numpy reference on int sums")
+
+    ratio = rf.stats.bytes_moved / max(rp.stats.bytes_moved, 1)
+    if ratio < 5.0:
+        raise AssertionError(f"pushdown moved only {ratio:.1f}x fewer bytes")
+
+    lat_p = _modelled_latency_s(clovis, "tbl", rp.stats.bytes_moved)
+    lat_f = _modelled_latency_s(clovis, "tbl", rf.stats.bytes_moved)
+    tp = timeit(lambda: push.run(query(push)), repeats=3)
+    tf = timeit(lambda: fetch.run(query(fetch)), repeats=3)
+    emit("analytics_groupby_pushdown", tp["mean_s"] * 1e6,
+         f"bytes_moved={rp.stats.bytes_moved} "
+         f"modelled_latency_us={lat_p*1e6:.1f}")
+    emit("analytics_groupby_fetchall", tf["mean_s"] * 1e6,
+         f"bytes_moved={rf.stats.bytes_moved} "
+         f"modelled_latency_us={lat_f*1e6:.1f}")
+    emit("analytics_groupby_reduction", 0.0,
+         f"bytes_ratio={ratio:.1f}x "
+         f"modelled_speedup={lat_f/lat_p:.1f}x results_match=1")
+    push.close(), fetch.close()
+
+
+def bench_stream_window(n_elements: int, window: int = 64) -> None:
+    clovis = fresh_clovis("analytics_stream")
+    tap = StreamTap()
+    ctx = StreamContext(n_producers=4, attach=tap)
+    rng = np.random.default_rng(1)
+    feed = {f"s{p}": rng.integers(0, 1000, n_elements).astype(np.int32)
+            for p in range(4)}
+    for i in range(n_elements):
+        for p in range(4):
+            ctx.push(p, f"s{p}", feed[f"s{p}"][i])
+    if not ctx.close():
+        raise AssertionError("stream failed to drain")
+
+    eng = clovis.analytics()
+    q = eng.from_stream(tap).window(window).aggregate("sum", value=col(0))
+    got = q.collect()
+    want = np.concatenate([K.window_reduce_ref(feed[s], window, op="sum")
+                           for s in sorted(feed)])
+    if not (np.sort(got) == np.sort(want)).all():
+        raise AssertionError("windowed stream result != numpy reference")
+    t = timeit(lambda: eng.run(q), repeats=3)
+    per_el = t["mean_s"] / (4 * n_elements) * 1e6
+    emit("analytics_stream_window", t["mean_s"] * 1e6,
+         f"elements={4*n_elements} us_per_element={per_el:.3f} "
+         "results_match=1")
+    eng.close()
+
+
+def run(n_objects: int = 16, rows: int = 8192,
+        stream_elements: int = 2000) -> None:
+    bench_filter_groupby(n_objects, rows)
+    bench_stream_window(stream_elements)
+
+
+if __name__ == "__main__":
+    run()

@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
-                                             streams|clovis] [--quick]
+                                             streams|clovis|percipience|
+                                             analytics] [--quick]
 """
 from __future__ import annotations
 
@@ -16,14 +17,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=("stream", "dht", "checkpoint", "streams",
-                             "clovis", "percipience"))
+                             "clovis", "percipience", "analytics"))
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes for CI-speed runs")
     args = ap.parse_args()
 
-    from benchmarks import (bench_checkpoint, bench_clovis, bench_dht,
-                            bench_percipience, bench_stream_windows,
-                            bench_streams)
+    from benchmarks import (bench_analytics, bench_checkpoint, bench_clovis,
+                            bench_dht, bench_percipience,
+                            bench_stream_windows, bench_streams)
 
     suites = {
         # paper Fig. 3: STREAM bandwidth, memory vs storage windows
@@ -44,6 +45,11 @@ def main() -> None:
         # percipience loop: prefetch hit-rate / latency vs reactive HSM
         "percipience": lambda: bench_percipience.run(
             n_reads=200 if args.quick else 400),
+        # analytics pushdown: bytes-moved / modelled latency vs fetch-all
+        "analytics": lambda: bench_analytics.run(
+            n_objects=8 if args.quick else 16,
+            rows=4096 if args.quick else 8192,
+            stream_elements=500 if args.quick else 2000),
     }
     chosen = [args.only] if args.only else list(suites)
     print("name,us_per_call,derived")

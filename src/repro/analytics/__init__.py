@@ -1,0 +1,28 @@
+"""Percipient analytics — pushdown dataflow queries over the object
+store (paper §4.1's Data Analytics layer: 'move the computation to the
+data' for the ALF/Spectre/Savu-class workloads).
+
+Architecture:
+
+    Dataset (declarative plan)          exprs.col / filter / select /
+        │  optimize()                   key_by / window / aggregate / join
+        ▼
+    PhysicalPlan  = storage fragment ++ caller tail ++ merge
+        │  AnalyticsEngine.run()
+        ▼
+    FunctionShipper  ── fragment per object, partials back ──▶ merge
+        (tier/heat-aware schedule via percipience; spill via Clovis)
+
+Aggregation hot paths run on Pallas kernels (kernels.py) with
+interpret-mode CPU fallback and pure-numpy references.
+
+Entry point: ``Clovis.analytics()`` or ``AnalyticsEngine(clovis)``.
+"""
+from repro.analytics.dataset import Dataset  # noqa: F401
+from repro.analytics.executor import (AnalyticsEngine,  # noqa: F401
+                                      AnalyticsError, QueryResult,
+                                      QueryStats)
+from repro.analytics.exprs import Expr, col, lit  # noqa: F401
+from repro.analytics.kernels import (histogram, histogram_ref,  # noqa: F401
+                                     segment_reduce, segment_reduce_ref,
+                                     window_reduce, window_reduce_ref)

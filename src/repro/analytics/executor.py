@@ -1,0 +1,376 @@
+"""Partition-parallel query executor — pushdown, tier-aware scheduling,
+spill.
+
+Execution of a container query:
+
+  1. the optimizer's fragment is registered with ``FunctionShipper`` and
+     shipped per object, so filters/projections/partial aggregations run
+     *at the store* and only reduced partials cross back;
+  2. per-object tasks are scheduled tier-aware: partitions already on
+     fast tiers (and, when percipience is attached, with high predicted
+     heat) run first, while cold slow-tier partitions are promoted in the
+     background so their migration overlaps the hot partitions' compute;
+  3. per-partition partials merge caller-side (segmented re-reduce for
+     group-bys, concat for rows/windows, partial combine for scalars);
+  4. join intermediates larger than ``spill_bytes`` grace-partition into
+     a spill container placed by RTHMS ``recommend_tier``.
+
+``pushdown=False`` fetches whole objects to the caller and runs the
+identical op interpreter locally — the fetch-all baseline the benchmark
+compares bytes-moved against.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analytics.dataset import (ContainerSource, Dataset, JoinSource,
+                                     StreamSource)
+from repro.analytics.plan import (KernelCfg, PhysicalPlan, apply_ops,
+                                  compile_fragment, merge_partials, optimize)
+from repro.core import layouts as lay
+from repro.core.function_shipping import FunctionShipper
+from repro.core.hsm import recommend_tier
+from repro.core.tiers import T2_FLASH, T3_DISK, T4_ARCHIVE, TIER_ORDER
+
+_TIER_RANK = {t: i for i, t in enumerate(TIER_ORDER)}
+_SLOW_TIERS = (T3_DISK, T4_ARCHIVE)
+
+
+class AnalyticsError(RuntimeError):
+    """A partition failed (after the shipper's retry policy)."""
+
+
+@dataclass
+class QueryStats:
+    pushdown: bool = True
+    partitions: int = 0
+    bytes_scanned: int = 0          # raw object bytes read at the store
+    bytes_moved: int = 0            # bytes crossing to the caller
+    spilled_bytes: int = 0
+    prefetched: int = 0             # cold partitions staged during the run
+    schedule: List[str] = field(default_factory=list)
+    plan: str = ""
+    wall_s: float = 0.0
+
+
+@dataclass
+class QueryResult:
+    value: Any
+    stats: QueryStats
+
+
+def _nbytes(v) -> int:
+    """Modelled wire size of a partial crossing store -> caller."""
+    if v is None:
+        return 0
+    if isinstance(v, np.ndarray):
+        return v.nbytes
+    if isinstance(v, (tuple, list)):
+        return sum(_nbytes(x) for x in v)
+    if isinstance(v, dict):
+        return sum(_nbytes(x) for x in v.values())
+    if isinstance(v, str):
+        return len(v)
+    return 8                       # scalar
+
+
+class AnalyticsEngine:
+    def __init__(self, clovis, *, shipper: Optional[FunctionShipper] = None,
+                 pushdown: bool = True, use_kernels: bool = True,
+                 interpret: bool = False, max_workers: int = 4,
+                 spill_bytes: int = 4 << 20,
+                 spill_container: str = "analytics_spill",
+                 prefetch_cold: bool = True):
+        self.clovis = clovis
+        self.shipper = shipper or FunctionShipper(clovis,
+                                                  max_workers=max_workers)
+        self._own_shipper = shipper is None
+        self.pushdown = pushdown
+        self.kcfg = KernelCfg(use_kernel=use_kernels, interpret=interpret)
+        self.max_workers = max_workers
+        self.spill_bytes = spill_bytes
+        self.spill_container = spill_container
+        self.prefetch_cold = prefetch_cold
+        self._qid = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # dataset constructors
+    # ------------------------------------------------------------------
+
+    def scan(self, container: str) -> Dataset:
+        """Dataset over a Clovis container, one partition per object."""
+        return Dataset(self, ContainerSource(container))
+
+    def from_stream(self, tap) -> Dataset:
+        """Dataset over a stream tap (see core.streams.StreamTap), one
+        partition per stream id with rows in sequence order."""
+        return Dataset(self, StreamSource(tap))
+
+    def explain(self, ds: Dataset) -> str:
+        plan = optimize(ds.ops, pushdown=self._can_push(ds))
+        src = ds.source
+        if isinstance(src, ContainerSource):
+            head = f"scan({src.container})"
+        elif isinstance(src, StreamSource):
+            head = "from_stream"
+        else:
+            head = f"join(on={src.on})"
+        return f"{head}\n{plan.describe()}"
+
+    def _can_push(self, ds: Dataset) -> bool:
+        return self.pushdown and isinstance(ds.source, ContainerSource)
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+
+    def run(self, ds: Dataset) -> QueryResult:
+        t0 = time.perf_counter()
+        stats = QueryStats(pushdown=self._can_push(ds))
+        if isinstance(ds.source, JoinSource):
+            value = self._run_join(ds, stats)
+        else:
+            plan = optimize(ds.ops, pushdown=self._can_push(ds))
+            stats.plan = plan.describe()
+            partials = self._run_partitions(ds, plan, stats)
+            value = merge_partials(plan, partials, self.kcfg)
+        stats.wall_s = time.perf_counter() - t0
+        return QueryResult(value, stats)
+
+    # -- partition execution -------------------------------------------
+
+    def _run_partitions(self, ds: Dataset, plan: PhysicalPlan,
+                        stats: QueryStats) -> List[Any]:
+        if isinstance(ds.source, StreamSource):
+            return self._run_stream(ds, stats)
+        return self._run_container(ds, plan, stats)
+
+    def _run_stream(self, ds: Dataset, stats: QueryStats) -> List[Any]:
+        parts = ds.source.tap.partitions()
+        out = []
+        for sid in sorted(parts):
+            arr = parts[sid]
+            stats.partitions += 1
+            stats.bytes_scanned += arr.nbytes
+            stats.bytes_moved += arr.nbytes      # already caller-side
+            stats.schedule.append(sid)
+            out.append(apply_ops(ds.ops, arr, self.kcfg))
+        return out
+
+    def _run_container(self, ds: Dataset, plan: PhysicalPlan,
+                       stats: QueryStats) -> List[Any]:
+        store = self.clovis.store
+        oids = self._schedule(self.clovis.container(ds.source.container))
+        stats.schedule = list(oids)
+        stats.partitions = len(oids)
+        use_ship = plan.pushdown and bool(plan.frag_spec)
+
+        frag_name = None
+        if use_ship:
+            with self._lock:
+                self._qid += 1
+                frag_name = f"analytics/q{self._qid}"
+            self.shipper.register(frag_name,
+                                  compile_fragment(plan.frag_spec, self.kcfg))
+
+        staged = self._stage_cold(oids, stats) if self.prefetch_cold else {}
+        errors: List[str] = []
+        lock = threading.Lock()
+
+        def task(oid: str):
+            fut = staged.get(oid)
+            if fut is not None:
+                fut.result()                 # promotion finished (or failed)
+            size = store.read_size(oid)
+            if use_ship:
+                res = self.shipper.ship(frag_name, oid)
+                if not res.ok:
+                    with lock:
+                        errors.append(f"{oid}: {res.error}")
+                    return None
+                partial = res.value
+                moved = _nbytes(partial)
+                if plan.local_ops:
+                    # the fragment never aggregates when a caller tail
+                    # exists, so its output is always rows
+                    partial = apply_ops(plan.local_ops, partial[1],
+                                        self.kcfg)
+            else:
+                # whole chain runs caller-side on the fetched object
+                arr = self._fetch(oid)
+                moved = arr.nbytes
+                partial = apply_ops(ds.ops, arr, self.kcfg)
+            with lock:
+                stats.bytes_scanned += size
+                stats.bytes_moved += moved
+            return partial
+
+        try:
+            with ThreadPoolExecutor(max_workers=self.max_workers,
+                                    thread_name_prefix="sage-analytics"
+                                    ) as pool:
+                partials = list(pool.map(task, oids))
+        finally:
+            if frag_name is not None:
+                self.shipper.unregister(frag_name)
+        if errors:
+            raise AnalyticsError("; ".join(errors))
+        return partials
+
+    def _fetch(self, oid: str) -> np.ndarray:
+        """Fetch-all path: the whole object crosses to the caller (same
+        materialization rule the storage-side shipper uses)."""
+        return self.clovis.materialize(oid)
+
+    # -- tier/heat-aware scheduling ------------------------------------
+
+    def _heat(self, oids: List[str]) -> Dict[str, float]:
+        percip = getattr(self.clovis, "percipience", None)
+        if not percip:
+            return {}
+        policy = percip[2]
+        try:
+            return policy.heat_map(oids)
+        except Exception:
+            return {}
+
+    def _schedule(self, oids: List[str]) -> List[str]:
+        """Hot/fast-tier partitions first: they run while cold ones are
+        still being promoted (or are simply slower to read)."""
+        store = self.clovis.store
+        heat = self._heat(oids)
+        return sorted(oids, key=lambda o: (
+            _TIER_RANK[store.meta(o).layout.tier], -heat.get(o, 0.0), o))
+
+    def _stage_cold(self, oids: List[str], stats: QueryStats) -> Dict:
+        """Kick slow-tier partitions' promotion onto a background pool so
+        migration overlaps execution of the hot partitions (which sort
+        first and drain the task queue while these stage)."""
+        store = self.clovis.store
+        cold = [o for o in oids
+                if store.meta(o).layout.tier in _SLOW_TIERS]
+        if not cold:
+            return {}
+        pool = ThreadPoolExecutor(max_workers=2,
+                                  thread_name_prefix="sage-stage")
+
+        def promote(oid: str):
+            try:
+                meta = store.meta(oid)
+                store.migrate(oid, lay.Layout(meta.layout.kind, T2_FLASH,
+                                              meta.layout.width))
+                with self._lock:
+                    stats.prefetched += 1
+            except Exception:
+                pass                      # staging is advisory
+
+        futs = {oid: pool.submit(promote, oid) for oid in cold}
+        pool.shutdown(wait=False)
+        return futs
+
+    # -- join ----------------------------------------------------------
+
+    def _run_join(self, ds: Dataset, stats: QueryStats):
+        src: JoinSource = ds.source
+        lres = self.run(src.left)
+        rres = self.run(src.right)
+        for side in (lres, rres):
+            stats.partitions += side.stats.partitions
+            stats.bytes_scanned += side.stats.bytes_scanned
+            stats.bytes_moved += side.stats.bytes_moved
+            stats.schedule.extend(side.stats.schedule)
+        lrows, rrows = np.atleast_2d(lres.value), np.atleast_2d(rres.value)
+        joined = self._join_rows(lrows, rrows, src.on, stats)
+        if not ds.ops:
+            return joined
+        plan = optimize(ds.ops, pushdown=False)
+        stats.plan = plan.describe()
+        return merge_partials(plan, [apply_ops(ds.ops, joined, self.kcfg)],
+                              self.kcfg)
+
+    def _join_rows(self, lrows, rrows, on: Tuple[int, int],
+                   stats: QueryStats) -> np.ndarray:
+        if (lrows.size and rrows.size
+                and lrows.nbytes + rrows.nbytes > self.spill_bytes):
+            return self._grace_join(lrows, rrows, on, stats)
+        return _hash_join(lrows, rrows, on)
+
+    def _grace_join(self, lrows, rrows, on: Tuple[int, int],
+                    stats: QueryStats) -> np.ndarray:
+        """Grace hash join: both sides hash-partition into spill objects
+        (tier picked by RTHMS recommend_tier), then join bucket-wise so
+        peak memory is ~1/P of the input."""
+        store = self.clovis.store
+        nb = 8
+        with self._lock:
+            self._qid += 1
+            qtag = f"{self.spill_container}/q{self._qid}"
+        spilled: List[str] = []
+        buckets: Dict[Tuple[str, int], str] = {}
+        for name, rows, kc in (("l", lrows, on[0]), ("r", rrows, on[1])):
+            keys = rows[:, kc].astype(np.int64) % nb
+            for b in range(nb):
+                sub = rows[keys == b]
+                if not sub.shape[0]:
+                    continue
+                tier = recommend_tier(store, size_bytes=sub.nbytes,
+                                      read_fraction=0.5, random_access=False)
+                oid = f"{qtag}/{name}{b}"
+                self.clovis.put_array(oid, sub,
+                                      container=self.spill_container,
+                                      layout=lay.Layout(lay.STRIPED, tier, 2))
+                buckets[(name, b)] = oid
+                spilled.append(oid)
+                stats.spilled_bytes += sub.nbytes
+        try:
+            outs = []
+            for b in range(nb):
+                lo = buckets.get(("l", b))
+                ro = buckets.get(("r", b))
+                if lo is None or ro is None:
+                    continue
+                outs.append(_hash_join(self.clovis.get_array(lo),
+                                       self.clovis.get_array(ro), on))
+            outs = [o for o in outs if o.shape[0]]
+            if not outs:
+                return np.zeros((0, lrows.shape[1] + rrows.shape[1]))
+            return np.vstack(outs)
+        finally:
+            for oid in spilled:
+                try:
+                    self.clovis.delete(oid)
+                except KeyError:
+                    pass
+
+    def close(self):
+        if self._own_shipper:
+            self.shipper.shutdown()
+
+
+def _hash_join(lrows: np.ndarray, rrows: np.ndarray,
+               on: Tuple[int, int]) -> np.ndarray:
+    """In-memory inner equi-join; output rows are left cols ++ right
+    cols, ordered by left row then right row (deterministic)."""
+    lc, rc = on
+    ncols = lrows.shape[1] + rrows.shape[1]
+    if not lrows.size or not rrows.size:
+        return np.zeros((0, ncols))
+    rk = rrows[:, rc].astype(np.int64)
+    index: Dict[int, List[int]] = {}
+    for j, k in enumerate(rk):
+        index.setdefault(int(k), []).append(j)
+    li, ri = [], []
+    for i, k in enumerate(lrows[:, lc].astype(np.int64)):
+        for j in index.get(int(k), ()):
+            li.append(i)
+            ri.append(j)
+    if not li:
+        return np.zeros((0, ncols))
+    return np.hstack([lrows[li], rrows[ri]])

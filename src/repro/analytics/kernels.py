@@ -1,0 +1,293 @@
+"""Aggregation hot-path kernels: segmented group-by reduce, windowed
+reductions, histogram.
+
+Layout follows the percipience heat-scan idiom (percipience/heat.py):
+inputs are padded to f32/int32 tile multiples (8, 128), the grid is
+parallel over output blocks, and CPU containers run the same kernel body
+with ``interpret=True``.  A pure-numpy reference implementation backs
+every kernel for correctness checks and as the no-JAX fallback.
+
+Segmented reduce: values live in a (rows, 128)-lane layout; each grid
+step owns a 128-segment block and folds every row in with a lane-iota
+membership mask — a (128 values x 128 segments) compare + masked reduce
+per row, all VPU work.  Integer inputs reduce in int32 so integer
+aggregates are *exact* (no f32 rounding), matching the numpy reference
+bit-for-bit.
+
+Windowed reduce: values arranged (window, n_windows) — window axis on
+sublanes, windows on lanes — one column reduce per 128-window block,
+the same shape trick the heat kernel uses for (hist, nobj).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+OPS = ("sum", "count", "min", "max")
+_LANES = 128
+_SUBLANES = 8
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _identity(op: str, dtype) -> float:
+    if op in ("sum", "count"):
+        return 0
+    big = np.iinfo(dtype).max if np.issubdtype(dtype, np.integer) \
+        else np.inf
+    return big if op == "min" else -big
+
+
+# ---------------------------------------------------------------------------
+# segmented group-by reduce
+# ---------------------------------------------------------------------------
+
+def _segment_kernel(v_ref, id_ref, out_ref, *, rows: int, op: str,
+                    ident):
+    """v, id: (rows, 128) value/segment-id lanes; out: (1, 128) — the
+    reduced value of each segment in this grid step's 128-segment block."""
+    v = v_ref[...]
+    ids = id_ref[...]
+    base = pl.program_id(0) * _LANES
+    segs = base + jax.lax.broadcasted_iota(jnp.int32, (_LANES, _LANES), 1)
+
+    def body(r, acc):                       # acc: (1, 128)
+        mask = ids[r][:, None] == segs      # (128 values, 128 segments)
+        if op == "count":
+            part = jnp.sum(mask.astype(acc.dtype), axis=0)
+        elif op == "sum":
+            part = jnp.sum(jnp.where(mask, v[r][:, None], 0), axis=0)
+        elif op == "min":
+            red = jnp.min(jnp.where(mask, v[r][:, None], ident), axis=0)
+            return jnp.minimum(acc, red[None, :])
+        else:                               # max
+            red = jnp.max(jnp.where(mask, v[r][:, None], ident), axis=0)
+            return jnp.maximum(acc, red[None, :])
+        return acc + part[None, :]
+
+    init = jnp.full_like(out_ref, ident) if op in ("min", "max") \
+        else jnp.zeros_like(out_ref)
+    out_ref[...] = jax.lax.fori_loop(0, rows, body, init)
+
+
+def segment_reduce_pallas(values: jax.Array, seg_ids: jax.Array,
+                          n_seg_blocks: int, *, op: str,
+                          interpret: bool = False) -> jax.Array:
+    """values: (rows, 128) f32/int32; seg_ids: (rows, 128) int32 with -1
+    marking padding lanes.  Returns (1, n_seg_blocks * 128) reduced
+    values (identity where a segment saw no members)."""
+    rows, lanes = values.shape
+    assert lanes == _LANES and rows % _SUBLANES == 0
+    ident = _identity(op, np.dtype(values.dtype))
+    kernel = functools.partial(_segment_kernel, rows=rows, op=op,
+                               ident=ident)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_seg_blocks,),
+        in_specs=[
+            pl.BlockSpec((rows, _LANES), lambda i: (0, 0)),
+            pl.BlockSpec((rows, _LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _LANES), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_seg_blocks * _LANES),
+                                       values.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(values, seg_ids)
+    return out
+
+
+def segment_reduce(values: np.ndarray, seg_ids: np.ndarray, n_segments: int,
+                   *, op: str = "sum",
+                   interpret: bool = False) -> np.ndarray:
+    """Reduce ``values`` by integer segment id in [0, n_segments).
+
+    Negative ids are dropped.  Integer inputs reduce in int32 (exact);
+    everything else in float32.  Returns (n_segments,) with the op
+    identity for empty segments.
+    """
+    if op not in OPS:
+        raise ValueError(f"op must be one of {OPS}")
+    v = np.asarray(values).reshape(-1)
+    ids = np.asarray(seg_ids, np.int32).reshape(-1)
+    if v.shape != ids.shape:
+        raise ValueError("values and seg_ids must align")
+    dtype = np.int32 if np.issubdtype(v.dtype, np.integer) else np.float32
+    if n_segments <= 0 or v.size == 0:
+        return np.full((max(n_segments, 0),),
+                       _identity(op, np.dtype(dtype)), dtype)
+    v = v.astype(dtype)
+    ident = _identity(op, np.dtype(dtype))
+
+    n = v.size
+    pad = (-n) % (_LANES * _SUBLANES)
+    if pad:
+        v = np.pad(v, (0, pad), constant_values=dtype(0) if op in
+                   ("sum", "count") else ident)
+        ids = np.pad(ids, (0, pad), constant_values=-1)
+    vm = v.reshape(-1, _LANES)
+    im = ids.reshape(-1, _LANES)
+    n_seg_blocks = -(-n_segments // _LANES)
+
+    out = np.asarray(segment_reduce_pallas(
+        jnp.asarray(vm), jnp.asarray(im), n_seg_blocks, op=op,
+        interpret=interpret or not _on_tpu()))
+    return out[0, :n_segments]
+
+
+def segment_reduce_ref(values: np.ndarray, seg_ids: np.ndarray,
+                       n_segments: int, *, op: str = "sum") -> np.ndarray:
+    """Pure-numpy reference (np.ufunc.at scatter)."""
+    v = np.asarray(values).reshape(-1)
+    ids = np.asarray(seg_ids, np.int64).reshape(-1)
+    dtype = np.int32 if np.issubdtype(v.dtype, np.integer) else np.float32
+    v = v.astype(dtype)
+    keep = ids >= 0
+    v, ids = v[keep], ids[keep]
+    out = np.full((n_segments,), _identity(op, np.dtype(dtype)), dtype)
+    if op == "sum":
+        np.add.at(out, ids, v)
+    elif op == "count":
+        np.add.at(out, ids, np.ones_like(v, dtype))
+    elif op == "min":
+        np.minimum.at(out, ids, v)
+    else:
+        np.maximum.at(out, ids, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# windowed reductions
+# ---------------------------------------------------------------------------
+
+def _window_kernel(v_ref, out_ref, *, op: str):
+    """v: (window, wb) — window axis on sublanes; out: (1, wb)."""
+    v = v_ref[...]
+    if op in ("sum", "count"):
+        out_ref[...] = jnp.sum(v, axis=0, keepdims=True)
+    elif op == "min":
+        out_ref[...] = jnp.min(v, axis=0, keepdims=True)
+    else:
+        out_ref[...] = jnp.max(v, axis=0, keepdims=True)
+
+
+def window_reduce_pallas(vt: jax.Array, *, op: str,
+                         interpret: bool = False) -> jax.Array:
+    """vt: (window, n_windows) with window % 8 == 0, n_windows % 128 == 0.
+    Returns (1, n_windows)."""
+    w, nw = vt.shape
+    assert w % _SUBLANES == 0 and nw % _LANES == 0
+    kernel = functools.partial(_window_kernel, op=op)
+    return pl.pallas_call(
+        kernel,
+        grid=(nw // _LANES,),
+        in_specs=[pl.BlockSpec((w, _LANES), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, _LANES), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nw), vt.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(vt)
+
+
+def _window_matrix(values: np.ndarray, window: int, slide: int
+                   ) -> np.ndarray:
+    """(n_windows, window) matrix of full windows (tail dropped)."""
+    if window <= 0 or slide <= 0:
+        raise ValueError("window size and slide must be positive")
+    v = np.asarray(values).reshape(-1)
+    if v.size < window:
+        return v[:0].reshape(0, window)
+    n_windows = (v.size - window) // slide + 1
+    idx = (np.arange(n_windows)[:, None] * slide +
+           np.arange(window)[None, :])
+    return v[idx]
+
+
+def window_reduce(values: np.ndarray, window: int, *, op: str = "sum",
+                  slide: Optional[int] = None,
+                  interpret: bool = False) -> np.ndarray:
+    """Tumbling (or, with ``slide``, sliding) window reduction over a 1-D
+    value sequence; only complete windows emit.  ``mean`` callers divide
+    the ``sum`` result by ``window``."""
+    if op not in OPS:
+        raise ValueError(f"op must be one of {OPS}")
+    slide = window if slide is None else slide
+    mat = _window_matrix(values, window, slide)
+    if mat.shape[0] == 0:
+        return np.zeros((0,), np.float32)
+    dtype = np.int32 if np.issubdtype(mat.dtype, np.integer) else np.float32
+    mat = mat.astype(dtype)
+    if op == "count":
+        mat = np.ones_like(mat)
+    ident = _identity(op, np.dtype(dtype))
+
+    vt = np.ascontiguousarray(mat.T)          # (window, n_windows)
+    w, nw = vt.shape
+    pw, pn = (-w) % _SUBLANES, (-nw) % _LANES
+    if pw or pn:
+        fill = dtype(0) if op in ("sum", "count") else ident
+        vt = np.pad(vt, ((0, pw), (0, pn)), constant_values=fill)
+    out = np.asarray(window_reduce_pallas(
+        jnp.asarray(vt), op=op, interpret=interpret or not _on_tpu()))
+    return out[0, :nw]
+
+
+def window_reduce_ref(values: np.ndarray, window: int, *, op: str = "sum",
+                      slide: Optional[int] = None) -> np.ndarray:
+    slide = window if slide is None else slide
+    mat = _window_matrix(values, window, slide)
+    dtype = np.int32 if np.issubdtype(mat.dtype, np.integer) else np.float32
+    mat = mat.astype(dtype)
+    if mat.shape[0] == 0:
+        return np.zeros((0,), np.float32)
+    fn = {"sum": np.sum, "count": np.sum, "min": np.min, "max": np.max}[op]
+    if op == "count":
+        mat = np.ones_like(mat)
+    return fn(mat, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# histogram (fixed uniform bins -> segmented count)
+# ---------------------------------------------------------------------------
+
+def histogram_bin_ids(values: np.ndarray, bins: int,
+                      vrange: Tuple[float, float]) -> np.ndarray:
+    """Uniform-bin ids with np.histogram edge semantics: values in
+    [lo, hi], hi landing in the last bin; out-of-range -> -1 (dropped)."""
+    lo, hi = float(vrange[0]), float(vrange[1])
+    if not (bins > 0 and lo < hi):
+        raise ValueError("histogram needs bins > 0 and vrange lo < hi")
+    v = np.asarray(values, np.float64).reshape(-1)
+    width = (hi - lo) / bins
+    ids = np.floor((v - lo) / width).astype(np.int64)
+    ids = np.minimum(ids, bins - 1)           # v == hi -> last bin
+    ids[(v < lo) | (v > hi)] = -1
+    return ids
+
+
+def histogram(values: np.ndarray, bins: int, vrange: Tuple[float, float],
+              *, interpret: bool = False) -> np.ndarray:
+    """np.histogram-compatible uniform-bin counts via the segmented
+    count kernel."""
+    ids = histogram_bin_ids(values, bins, vrange)
+    ones = np.ones(ids.shape, np.int32)
+    return segment_reduce(ones, ids, bins, op="count", interpret=interpret)
+
+
+def histogram_ref(values: np.ndarray, bins: int,
+                  vrange: Tuple[float, float]) -> np.ndarray:
+    return np.histogram(np.asarray(values).reshape(-1), bins=bins,
+                        range=vrange)[0].astype(np.int32)

@@ -1,0 +1,373 @@
+"""Logical plan, optimizer, and fragment execution for dataflow queries.
+
+A ``Dataset`` builds a linear chain of logical ops over a source
+(container scan, stream tap, or join).  The optimizer splits the chain
+into:
+
+  * a **fragment** — the maximal pushable prefix (filters, projections,
+    key-by, windows, partial aggregation), serialised to a JSON-able
+    spec and shipped *to the store* via FunctionShipper, so only reduced
+    partials cross back to the caller;
+  * **local ops** — the non-pushable suffix (arbitrary ``map_rows``
+    functions and anything after them), run caller-side per partition;
+  * a **merge** describing how per-partition partials combine (row
+    concat, grouped segmented re-reduce, windowed concat, scalar
+    combine, histogram sum).
+
+Both the shipped fragment and the caller-side path execute through the
+same ``apply_ops`` interpreter, so pushdown and fetch-all produce
+identical results by construction.  Stage fusion falls out of the same
+design: one fragment evaluates the whole prefix in a single pass over
+the partition instead of materialising per-stage intermediates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analytics import kernels as K
+from repro.analytics.exprs import Expr, as_expr, from_spec
+
+AGGS = ("sum", "count", "mean", "min", "max", "histogram")
+
+
+# ---------------------------------------------------------------------------
+# logical ops
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Filter:
+    expr: Expr
+
+
+@dataclass(frozen=True)
+class Select:
+    cols: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class MapRows:
+    """Arbitrary rows->rows python function — never pushed down."""
+    fn: Callable[[np.ndarray], np.ndarray]
+    name: str = "map"
+
+
+@dataclass(frozen=True)
+class KeyBy:
+    key: Expr
+
+
+@dataclass(frozen=True)
+class Window:
+    size: int
+    slide: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class Aggregate:
+    agg: str
+    value: Optional[Expr] = None
+    bins: int = 32
+    vrange: Optional[Tuple[float, float]] = None
+
+
+Op = Any                     # Filter | Select | MapRows | KeyBy | Window | Aggregate
+
+
+def op_to_spec(op: Op) -> Dict:
+    if isinstance(op, Filter):
+        return {"op": "filter", "expr": op.expr.to_spec()}
+    if isinstance(op, Select):
+        return {"op": "select", "cols": list(op.cols)}
+    if isinstance(op, KeyBy):
+        return {"op": "key_by", "key": op.key.to_spec()}
+    if isinstance(op, Window):
+        return {"op": "window", "size": op.size, "slide": op.slide}
+    if isinstance(op, Aggregate):
+        return {"op": "aggregate", "agg": op.agg,
+                "value": None if op.value is None else op.value.to_spec(),
+                "bins": op.bins, "vrange": op.vrange}
+    raise TypeError(f"op {op!r} is not pushable")
+
+
+def op_from_spec(spec: Dict) -> Op:
+    kind = spec["op"]
+    if kind == "filter":
+        return Filter(from_spec(spec["expr"]))
+    if kind == "select":
+        return Select(tuple(spec["cols"]))
+    if kind == "key_by":
+        return KeyBy(from_spec(spec["key"]))
+    if kind == "window":
+        return Window(spec["size"], spec["slide"])
+    if kind == "aggregate":
+        v = spec["value"]
+        vrange = spec["vrange"]
+        return Aggregate(spec["agg"], None if v is None else from_spec(v),
+                         spec["bins"],
+                         None if vrange is None else tuple(vrange))
+    raise ValueError(f"bad op spec {spec!r}")
+
+
+def is_pushable(op: Op) -> bool:
+    return not isinstance(op, MapRows)
+
+
+# ---------------------------------------------------------------------------
+# physical plan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PhysicalPlan:
+    frag_spec: List[Dict]               # pushable prefix (ships to storage)
+    local_ops: List[Op]                 # non-pushable suffix (caller-side)
+    merge: str                          # rows | scalar | group | window | histogram
+    agg: Optional[str] = None           # aggregate op for merged kinds
+    pushdown: bool = True
+
+    def describe(self) -> str:
+        lines = []
+        where = "store" if (self.pushdown and self.frag_spec) else "caller"
+        for s in self.frag_spec:
+            lines.append(f"  [{where}] {s['op']}"
+                         + (f" {s.get('agg')}" if s["op"] == "aggregate" else ""))
+        for op in self.local_ops:
+            lines.append(f"  [caller] {type(op).__name__.lower()}")
+        lines.append(f"  [merge] {self.merge}"
+                     + (f"({self.agg})" if self.agg else ""))
+        return "\n".join(lines)
+
+
+def optimize(ops: Sequence[Op], *, pushdown: bool = True) -> PhysicalPlan:
+    """Split the op chain at the first non-pushable op and derive the
+    merge kind from the terminal op."""
+    ops = list(ops)
+    if any(isinstance(o, (KeyBy, Window)) for o in ops):
+        if not (ops and isinstance(ops[-1], Aggregate)):
+            raise ValueError("key_by/window requires a terminal aggregate "
+                             "— the grouping would otherwise be silently "
+                             "dropped")
+        if ops[-1].agg == "histogram":
+            raise ValueError("per-group/per-window histograms are not "
+                             "supported; histogram aggregates globally")
+    split = len(ops)
+    for i, op in enumerate(ops):
+        if not is_pushable(op):
+            split = i
+            break
+    frag, local = ops[:split], ops[split:]
+
+    merge, agg = "rows", None
+    if ops and isinstance(ops[-1], Aggregate):
+        last = ops[-1]
+        agg = last.agg
+        if last.agg == "histogram":
+            merge = "histogram"
+        elif any(isinstance(o, KeyBy) for o in ops):
+            merge = "group"
+        elif any(isinstance(o, Window) for o in ops):
+            merge = "window"
+        else:
+            merge = "scalar"
+    return PhysicalPlan([op_to_spec(o) for o in frag], local, merge,
+                        agg, pushdown)
+
+
+# ---------------------------------------------------------------------------
+# op interpreter (runs store-side inside a shipped fragment AND
+# caller-side — identical code path, so modes agree by construction)
+# ---------------------------------------------------------------------------
+
+def as_rows(arr: np.ndarray) -> np.ndarray:
+    """Normalise an object/stream payload to (rows, ncols)."""
+    arr = np.asarray(arr)
+    if arr.ndim == 1:
+        return arr.reshape(-1, 1)
+    if arr.ndim == 2:
+        return arr
+    return arr.reshape(arr.shape[0], -1)
+
+
+@dataclass
+class KernelCfg:
+    use_kernel: bool = True
+    interpret: bool = False
+
+
+def _seg_reduce(vals, ids, n, op, kcfg: KernelCfg):
+    if kcfg.use_kernel:
+        return K.segment_reduce(vals, ids, n, op=op,
+                                interpret=kcfg.interpret)
+    return K.segment_reduce_ref(vals, ids, n, op=op)
+
+
+def _win_reduce(vals, size, slide, op, kcfg: KernelCfg):
+    if kcfg.use_kernel:
+        return K.window_reduce(vals, size, op=op, slide=slide,
+                               interpret=kcfg.interpret)
+    return K.window_reduce_ref(vals, size, op=op, slide=slide)
+
+
+def _agg_values(rows: np.ndarray, agg: Aggregate) -> np.ndarray:
+    if agg.value is not None:
+        return np.asarray(agg.value(rows))
+    if agg.agg == "count":
+        return np.ones(rows.shape[0], np.int32)
+    if rows.shape[1] == 1:
+        return rows[:, 0]
+    raise ValueError(f"aggregate {agg.agg!r} over {rows.shape[1]} columns "
+                     "needs an explicit value expression")
+
+
+def _grouped_partial(key: np.ndarray, vals: np.ndarray, agg: Aggregate,
+                     kcfg: KernelCfg):
+    keys, inv = np.unique(key.astype(np.int64), return_inverse=True)
+    n = len(keys)
+    if agg.agg == "mean":
+        sums = _seg_reduce(vals.astype(np.float32), inv, n, "sum", kcfg)
+        counts = _seg_reduce(np.ones_like(vals, np.int32), inv, n,
+                             "count", kcfg)
+        return ("group", "mean", keys, (sums, counts))
+    op = "sum" if agg.agg == "count" else agg.agg
+    v = np.ones_like(vals, np.int32) if agg.agg == "count" else vals
+    return ("group", agg.agg, keys, _seg_reduce(v, inv, n, op, kcfg))
+
+
+def _scalar_partial(vals: np.ndarray, agg: Aggregate):
+    if vals.size == 0:
+        return ("scalar", agg.agg, None)
+    if agg.agg == "sum":
+        return ("scalar", "sum", vals.sum(dtype=np.float64))
+    if agg.agg == "count":
+        return ("scalar", "count", int(vals.size))
+    if agg.agg == "mean":
+        return ("scalar", "mean", (vals.sum(dtype=np.float64),
+                                   int(vals.size)))
+    if agg.agg == "min":
+        return ("scalar", "min", vals.min())
+    return ("scalar", "max", vals.max())
+
+
+def apply_ops(ops: Sequence[Op], arr: np.ndarray,
+              kcfg: Optional[KernelCfg] = None):
+    """Run an op chain over one partition; returns a tagged partial:
+    ("rows", ndarray) | ("scalar", agg, payload) |
+    ("group", agg, keys, payload) | ("window", agg, ndarray) |
+    ("histogram", counts)."""
+    kcfg = kcfg or KernelCfg()
+    rows = as_rows(arr)
+    key: Optional[np.ndarray] = None
+    window: Optional[Window] = None
+    for op in ops:
+        if isinstance(op, Filter):
+            rows = rows[np.asarray(op.expr(rows), bool)]
+        elif isinstance(op, Select):
+            rows = rows[:, list(op.cols)]
+        elif isinstance(op, MapRows):
+            rows = as_rows(op.fn(rows))
+        elif isinstance(op, KeyBy):
+            key = np.asarray(op.key(rows))
+        elif isinstance(op, Window):
+            window = op
+        elif isinstance(op, Aggregate):
+            vals = _agg_values(rows, op)
+            if op.agg == "histogram":
+                if op.vrange is None:
+                    raise ValueError("histogram pushdown needs a fixed "
+                                     "vrange=(lo, hi)")
+                ids = K.histogram_bin_ids(vals, op.bins, op.vrange)
+                counts = _seg_reduce(np.ones(ids.shape, np.int32), ids,
+                                     op.bins, "count", kcfg)
+                return ("histogram", counts)
+            if key is not None:
+                return _grouped_partial(key, vals, op, kcfg)
+            if window is not None:
+                wop = "sum" if op.agg in ("mean", "count") else op.agg
+                if op.agg == "count":
+                    vals = np.ones_like(vals, np.int32)
+                red = _win_reduce(vals, window.size, window.slide, wop,
+                                  kcfg)
+                if op.agg == "mean":
+                    red = red.astype(np.float64) / window.size
+                return ("window", op.agg, red)
+            return _scalar_partial(vals, op)
+        else:
+            raise TypeError(f"unknown op {op!r}")
+    return ("rows", rows)
+
+
+def compile_fragment(frag_spec: List[Dict], kcfg: KernelCfg
+                     ) -> Callable[[np.ndarray], Any]:
+    """Build the storage-side executor function for a fragment spec —
+    this is what gets registered with FunctionShipper."""
+    ops = [op_from_spec(s) for s in frag_spec]
+
+    def fragment(arr: np.ndarray):
+        return apply_ops(ops, arr, kcfg)
+
+    return fragment
+
+
+# ---------------------------------------------------------------------------
+# merging per-partition partials
+# ---------------------------------------------------------------------------
+
+def merge_partials(plan: PhysicalPlan, partials: List[Any],
+                   kcfg: Optional[KernelCfg] = None):
+    """Combine per-partition partials into the query result."""
+    kcfg = kcfg or KernelCfg()
+    partials = [p for p in partials if p is not None]
+    if plan.merge == "rows":
+        mats = [p[1] for p in partials if p[1].shape[0]]
+        if not mats:
+            return np.zeros((0, 0))
+        return np.vstack(mats)
+    if plan.merge == "histogram":
+        counts = [p[1] for p in partials]
+        return np.sum(counts, axis=0) if counts else np.zeros(0, np.int32)
+    if plan.merge == "window":
+        parts = [p[2] for p in partials if p[2].size]
+        return np.concatenate(parts) if parts else np.zeros(0)
+    if plan.merge == "scalar":
+        return _merge_scalar(plan.agg, [p[2] for p in partials
+                                        if p[2] is not None])
+    if plan.merge == "group":
+        return _merge_group(plan.agg, partials, kcfg)
+    raise ValueError(f"bad merge kind {plan.merge!r}")
+
+
+def _merge_scalar(agg: str, payloads: List[Any]):
+    if not payloads:
+        return None
+    if agg == "sum":
+        return float(np.sum(payloads))
+    if agg == "count":
+        return int(np.sum(payloads))
+    if agg == "mean":
+        s = sum(p[0] for p in payloads)
+        c = sum(p[1] for p in payloads)
+        return s / c if c else None
+    return float(np.min(payloads) if agg == "min" else np.max(payloads))
+
+
+def _merge_group(agg: str, partials: List[Any], kcfg: KernelCfg
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Re-reduce per-partition (keys, payload) partials over the union
+    key set — the caller-side half of the two-phase grouped aggregate."""
+    partials = [p for p in partials if len(p[2])]
+    if not partials:
+        return np.zeros(0, np.int64), np.zeros(0)
+    all_keys = np.concatenate([p[2] for p in partials])
+    keys, inv = np.unique(all_keys, return_inverse=True)
+    n = len(keys)
+    if agg == "mean":
+        sums = np.concatenate([p[3][0] for p in partials])
+        counts = np.concatenate([p[3][1] for p in partials])
+        s = _seg_reduce(sums.astype(np.float32), inv, n, "sum", kcfg)
+        c = _seg_reduce(counts, inv, n, "sum", kcfg)
+        return keys, s.astype(np.float64) / np.maximum(c, 1)
+    vals = np.concatenate([p[3] for p in partials])
+    op = "sum" if agg in ("sum", "count") else agg
+    return keys, _seg_reduce(vals, inv, n, op, kcfg)

@@ -19,7 +19,8 @@ placement); its names are re-exported here lazily (PEP 562) so
 """
 from repro.core.addb import Addb, GLOBAL_ADDB  # noqa: F401
 from repro.core.clovis import Clovis, ClovisIndex  # noqa: F401
-from repro.core.function_shipping import FunctionShipper  # noqa: F401
+from repro.core.function_shipping import (FunctionShipper,  # noqa: F401
+                                          PartialAgg, ShipResult)
 from repro.core.ha import FailureEvent, HAMonitor  # noqa: F401
 from repro.core.hsm import (CountingScorer, HsmDaemon, HsmPolicy,  # noqa: F401
                             recommend_tier)
@@ -27,7 +28,8 @@ from repro.core.layouts import Layout, DEFAULT_LAYOUTS  # noqa: F401
 from repro.core.object_store import ObjectStore  # noqa: F401
 from repro.core.storage_window import (MemoryWindow, StorageWindow,  # noqa: F401
                                        WindowAllocator)
-from repro.core.streams import StreamContext, clovis_appender  # noqa: F401
+from repro.core.streams import (StreamContext, StreamTap,  # noqa: F401
+                                clovis_appender, tee)
 from repro.core.tiers import (DeviceModel, TierDevice, TierPool,  # noqa: F401
                               make_tier_pools)
 from repro.core.transactions import (Transaction, TransactionManager,  # noqa: F401

@@ -150,6 +150,7 @@ class Clovis:
         self.store = ObjectStore(root / "store", self.pools, addb)
         self.addb = self.store.addb
         self._indices: Dict[str, ClovisIndex] = {}
+        self.percipience = None   # set by enable_percipience
         self._lock = threading.RLock()
 
     # ---- access interface: objects ----
@@ -203,6 +204,16 @@ class Clovis:
         dtype = _dtype_from_name(meta.attrs["dtype"])
         return np.frombuffer(raw, dtype=dtype).reshape(meta.attrs["shape"])
 
+    def materialize(self, oid: str) -> np.ndarray:
+        """Object payload as a numpy array: typed (``get_array``) for
+        ``kind == 'array'`` objects, raw uint8 otherwise — the single
+        materialization rule shared by function shipping (storage-side)
+        and the analytics fetch-all path (caller-side), so the two can
+        never diverge."""
+        if self.store.meta(oid).attrs.get("kind") == "array":
+            return self.get_array(oid)
+        return np.frombuffer(self.get(oid), dtype=np.uint8)
+
     # ---- index interface ----
 
     def index(self, name: str) -> ClovisIndex:
@@ -226,9 +237,19 @@ class Clovis:
         """Wire the percipience loop (feature extraction, prefetch,
         learned placement) onto this stack; see
         repro.percipience.attach_percipience for knobs.
-        Returns (extractor, prefetcher, policy)."""
+        Returns (extractor, prefetcher, policy); the tuple is kept on
+        ``self.percipience`` so downstream layers (analytics scheduling,
+        HSM eviction) can consult heat without re-plumbing."""
         from repro.percipience import attach_percipience
-        return attach_percipience(self, **kw)
+        self.percipience = attach_percipience(self, **kw)
+        return self.percipience
+
+    def analytics(self, **kw) -> "AnalyticsEngine":
+        """Entry point to the percipient analytics engine — declarative
+        pushdown dataflow queries over containers and streams (see
+        repro.analytics and docs/analytics.md)."""
+        from repro.analytics import AnalyticsEngine
+        return AnalyticsEngine(self, **kw)
 
 
 def _dtype_name(dt) -> str:

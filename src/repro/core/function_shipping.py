@@ -22,7 +22,7 @@ import concurrent.futures as cf
 import threading
 import zlib
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,12 +39,24 @@ class ShipResult:
     retries: int = 0
 
 
+@dataclass
+class PartialAgg:
+    """A distributive/algebraic aggregate: ``partial`` runs *at the
+    store* per object and returns a small partial state; ``combine``
+    merges the per-object partials at the caller.  Only the partials
+    cross the wire — the pushdown contract the analytics engine builds
+    on (paper's 'move the computation to the data')."""
+    partial: Callable[[np.ndarray], Any]
+    combine: Callable[[List[Any]], Any]
+
+
 class FunctionShipper:
     def __init__(self, clovis: Clovis, max_workers: int = 4,
                  max_retries: int = 2):
         self.clovis = clovis
         self.max_retries = max_retries
         self._registry: Dict[str, Callable[[np.ndarray], Any]] = {}
+        self._partials: Dict[str, PartialAgg] = {}
         self._pool = cf.ThreadPoolExecutor(max_workers=max_workers,
                                            thread_name_prefix="sage-ship")
         self._lock = threading.Lock()
@@ -53,6 +65,18 @@ class FunctionShipper:
     def register(self, name: str, fn: Callable[[np.ndarray], Any]):
         with self._lock:
             self._registry[name] = fn
+
+    def unregister(self, name: str):
+        with self._lock:
+            self._registry.pop(name, None)
+
+    def register_partial(self, name: str, partial: Callable[[np.ndarray], Any],
+                         combine: Callable[[List[Any]], Any]):
+        """Register a partial aggregate under the partial-agg namespace
+        (separate from ``register`` so existing whole-result functions
+        keep their semantics)."""
+        with self._lock:
+            self._partials[name] = PartialAgg(partial, combine)
 
     def _register_builtins(self):
         import jax
@@ -91,16 +115,26 @@ class FunctionShipper:
             "topk_abs",
             lambda a: np.sort(np.abs(a.reshape(-1)))[-8:][::-1].copy())
 
+        # distributive/algebraic partial aggregates: each object yields a
+        # tiny partial, combined caller-side — the pushdown primitives
+        self.register_partial("sum", lambda a: float(np.sum(a, dtype=np.float64)),
+                              lambda ps: float(np.sum(ps)))
+        self.register_partial("count", lambda a: int(a.size),
+                              lambda ps: int(np.sum(ps)))
+        self.register_partial(
+            "mean",
+            lambda a: (float(np.sum(a, dtype=np.float64)), int(a.size)),
+            lambda ps: (sum(s for s, _ in ps) / max(sum(c for _, c in ps), 1)))
+        self.register_partial("min", lambda a: float(np.min(a)),
+                              lambda ps: float(np.min(ps)))
+        self.register_partial("max", lambda a: float(np.max(a)),
+                              lambda ps: float(np.max(ps)))
+
     # ------------------------------------------------------------------
 
     def _run_once(self, fn_name: str, oid: str) -> Any:
         fn = self._registry[fn_name]
-        meta = self.clovis.store.meta(oid)
-        if meta.attrs.get("kind") == "array":
-            data = self.clovis.get_array(oid)
-        else:
-            data = np.frombuffer(self.clovis.get(oid), dtype=np.uint8)
-        return fn(data)
+        return fn(self.clovis.materialize(oid))
 
     def ship(self, fn_name: str, oid: str) -> ShipResult:
         """Synchronous shipped invocation with retries."""
@@ -126,6 +160,71 @@ class FunctionShipper:
         futs = [self.ship_async(fn_name, oid)
                 for oid in self.clovis.container(container)]
         return [f.result() for f in futs]
+
+    # ------------------------------------------------------------------
+    # partial-aggregate shipping (analytics pushdown substrate)
+    # ------------------------------------------------------------------
+
+    def ship_partial(self, agg_name: str, container: str
+                     ) -> Tuple[Any, List[ShipResult]]:
+        """Run a registered partial aggregate at the store for every
+        object in ``container`` and combine the partials caller-side.
+
+        Returns ``(combined, per_object_results)``; objects whose shipped
+        partial failed (after retries) are excluded from the combine and
+        reported in their ShipResult.
+        """
+        if agg_name not in self._partials:
+            raise KeyError(f"unknown partial aggregate {agg_name!r}")
+        agg = self._partials[agg_name]
+        oids = self.clovis.container(container)
+        futs = [self._pool.submit(self._ship_with, agg.partial, agg_name, oid)
+                for oid in oids]
+        results = [f.result() for f in futs]
+        partials = [r.value for r in results if r.ok]
+        combined = agg.combine(partials) if partials else None
+        return combined, results
+
+    def _ship_with(self, fn: Callable[[np.ndarray], Any], fn_name: str,
+                   oid: str) -> ShipResult:
+        """Ship an unregistered callable (retry loop shared with ship)."""
+        err = ""
+        for attempt in range(self.max_retries + 1):
+            try:
+                return ShipResult(oid, fn_name, True,
+                                  fn(self.clovis.materialize(oid)),
+                                  retries=attempt)
+            except Exception as e:      # resilient offload: catch & retry
+                err = f"{type(e).__name__}: {e}"
+        return ShipResult(oid, fn_name, False, error=err,
+                          retries=self.max_retries)
+
+    def ship_blocks(self, fn_name: str, oid: str) -> ShipResult:
+        """Per-block shipped invocation: the executor streams the object
+        block-by-block through ``fn`` instead of materialising it whole
+        — ``value`` is the list of per-block results, in block order.
+        Blocks are raw bytes views (uint8), since a block boundary need
+        not align with the object's logical element type.
+        """
+        if fn_name not in self._registry:
+            return ShipResult(oid, fn_name, False, error="unknown function")
+        fn = self._registry[fn_name]
+        err = ""
+        for attempt in range(self.max_retries + 1):
+            try:
+                meta = self.clovis.store.meta(oid)
+                size = self.clovis.store.read_size(oid)
+                out = []
+                for idx in range(meta.nblocks):
+                    blk = self.clovis.store.read(oid, idx, 1)
+                    lo = idx * meta.block_size
+                    blk = blk[: max(0, min(len(blk), size - lo))]
+                    out.append(fn(np.frombuffer(blk, dtype=np.uint8)))
+                return ShipResult(oid, fn_name, True, out, retries=attempt)
+            except Exception as e:      # resilient offload: catch & retry
+                err = f"{type(e).__name__}: {e}"
+        return ShipResult(oid, fn_name, False, error=err,
+                          retries=self.max_retries)
 
     def shutdown(self):
         self._pool.shutdown(wait=True)

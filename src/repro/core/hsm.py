@@ -126,14 +126,33 @@ class HsmDaemon:
         n += self._relieve_pressure()
         return n
 
+    def _victim_rank(self, oid: str, now: float) -> float:
+        """Demotion rank under watermark pressure (lowest evicts first).
+
+        Percipient scorers expose ``victim_rank`` (preferred: handles
+        never-observed objects) or ``heat_of``: rank by predicted heat so
+        the object least likely to be re-read goes first, even when its
+        raw last-access time looks recent (e.g. one straggler touch on an
+        otherwise idle object).  Scorers without heat fall back to the
+        historical LRU order.
+        """
+        rank = getattr(self.scorer, "victim_rank", None)
+        if rank is not None:
+            return rank(self.store.meta(oid), now)
+        heat_of = getattr(self.scorer, "heat_of", None)
+        if heat_of is not None:
+            return heat_of(oid, now)
+        return self.store.meta(oid).last_access
+
     def _relieve_pressure(self) -> int:
         n = 0
+        now = time.time()
         for tier in TIER_ORDER[:-1]:
             while self._tier_fill(tier) > self.policy.high_watermark:
                 victims = sorted(
                     (oid for oid, m in self.store._meta.items()
                      if m.layout.tier == tier and not m.attrs.get("pinned")),
-                    key=lambda o: self.store.meta(o).last_access)
+                    key=lambda o: self._victim_rank(o, now))
                 if not victims:
                     break
                 down = self._tier_down(tier)

@@ -132,6 +132,63 @@ class StreamContext:
                     "consumers": self.n_consumers}
 
 
+def tee(*fns: StreamFn) -> StreamFn:
+    """Fan one consumed element out to several attached computations
+    (e.g. persist via clovis_appender AND feed a StreamTap)."""
+
+    def attach(el: StreamElement):
+        for fn in fns:
+            fn(el)
+
+    return attach
+
+
+class StreamTap:
+    """Stream → dataset bridge: an attached computation that folds
+    consumed elements into per-stream row buffers, which the analytics
+    engine scans as in-memory partitions (``Dataset.from_stream``).
+
+    Rows are kept in sequence order regardless of which consumer drained
+    them (consumers are work-stealing, so arrival order is not seq
+    order).  ``max_rows`` bounds memory per stream: oldest rows are
+    dropped once exceeded — live queries window over recent data, the
+    persisted stream objects hold full history.
+    """
+
+    def __init__(self, max_rows: int = 1 << 16):
+        self.max_rows = max_rows
+        self._rows: Dict[str, List[tuple]] = {}
+        self._lock = threading.Lock()
+
+    def __call__(self, el: StreamElement):
+        import numpy as np
+        row = np.atleast_1d(np.asarray(el.payload))
+        with self._lock:
+            buf = self._rows.setdefault(el.stream_id, [])
+            buf.append((el.seq, row))
+            # amortised trim: sort only once the buffer doubles the
+            # bound, so the consumer hot path stays O(1) per element
+            if len(buf) > 2 * self.max_rows:
+                buf.sort(key=lambda t: t[0])
+                del buf[: len(buf) - self.max_rows]
+
+    def partitions(self) -> Dict[str, "np.ndarray"]:
+        """Per-stream (rows, ncols) arrays, rows in sequence order."""
+        import numpy as np
+        with self._lock:
+            out = {}
+            for sid, buf in self._rows.items():
+                if not buf:
+                    continue
+                ordered = sorted(buf, key=lambda t: t[0])[-self.max_rows:]
+                out[sid] = np.stack([r for _, r in ordered])
+            return out
+
+    def clear(self):
+        with self._lock:
+            self._rows.clear()
+
+
 def clovis_appender(clovis, container: str = "streams",
                     block_size: int = 1 << 16, layout=None) -> StreamFn:
     """Attached computation that appends elements to per-stream objects —

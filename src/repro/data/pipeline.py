@@ -22,13 +22,28 @@ CORPUS_CONTAINER = "corpus"
 
 
 def build_synthetic_corpus(clovis: Clovis, *, vocab: int, n_shards: int = 8,
-                           tokens_per_shard: int = 65536, seed: int = 0
-                           ) -> int:
-    """Write a token corpus into the store; returns total tokens."""
+                           tokens_per_shard: int = 65536, seed: int = 0,
+                           noise: float = 0.15) -> int:
+    """Write a token corpus into the store; returns total tokens.
+
+    Tokens follow a first-order Markov chain over a small state subset
+    (successor ``(t * 7 + 3) % K`` with probability ``1 - noise``,
+    uniform over the full vocab otherwise): i.i.d. uniform tokens have no
+    learnable structure at all — cross-entropy is pinned at ln(vocab) and
+    any train-reduces-loss check can only pass by memorising the corpus —
+    whereas a skewed marginal plus a low-entropy transition rule gives
+    the model a real signal, like the instrument feeds it stands in for.
+    """
     rng = np.random.default_rng(seed)
+    K = max(2, min(64, vocab))
     total = 0
     for s in range(n_shards):
-        toks = rng.integers(0, vocab, size=tokens_per_shard, dtype=np.int32)
+        toks = np.empty(tokens_per_shard, dtype=np.int32)
+        toks[0] = rng.integers(0, K)
+        noisy = rng.random(tokens_per_shard) < noise
+        rand = rng.integers(0, vocab, size=tokens_per_shard, dtype=np.int32)
+        for i in range(1, tokens_per_shard):
+            toks[i] = rand[i] if noisy[i] else (toks[i - 1] * 7 + 3) % K
         oid = f"corpus/shard{s:04d}"
         if not clovis.exists(oid):
             clovis.put_array(oid, toks, container=CORPUS_CONTAINER,

@@ -58,6 +58,14 @@ class PercipientPolicy:
             self.refresh(now)
         return self._heat.get(oid, 0.0)
 
+    def heat_map(self, oids, now: Optional[float] = None) -> Dict[str, float]:
+        """Batch heat query (one kernel call via the refresh cache) — the
+        analytics executor's tier-aware scheduling hook."""
+        now = time.time() if now is None else now
+        if now - self._heat_ts > self.refresh_s:
+            self.refresh(now)
+        return {oid: self._heat.get(oid, 0.0) for oid in oids}
+
     # ------------------------------------------------------------------
     # HsmDaemon scorer hook
     # ------------------------------------------------------------------
@@ -74,3 +82,16 @@ class PercipientPolicy:
         if heat <= self.demote_heat:
             return DEMOTE
         return None
+
+    def victim_rank(self, meta, now: float) -> float:
+        """Watermark-eviction rank (HsmDaemon pressure path; lowest
+        evicts first).  Never-observed objects must not score 0 — that
+        would conflate unknown with measured-cold and evict a just-read
+        pre-attach object first — so they get the heat a single access
+        at ``meta.last_access`` would carry, keeping every object on the
+        same decayed-heat scale."""
+        import math
+        if self.extractor.access_count(meta.oid) == 0:
+            lam = math.log(2.0) / self.half_life_s
+            return math.exp(-lam * max(now - meta.last_access, 0.0))
+        return self.heat_of(meta.oid, now)

@@ -1,0 +1,376 @@
+"""Analytics subsystem tests: kernels vs numpy references, expression
+DSL round-trips, plan optimization/pushdown split, query correctness
+across pushdown / fetch-all / numpy, tier+heat-aware scheduling, join
+spill, and the stream→dataset bridge."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.analytics import col, lit
+from repro.analytics import kernels as K
+from repro.analytics.exprs import from_spec
+from repro.analytics.plan import (Aggregate, Filter, MapRows, Select,
+                                  optimize)
+from repro.core import StreamContext, StreamTap, tee
+from repro.core import layouts as lay
+from repro.core.layouts import Layout
+from repro.core.tiers import T1_NVRAM, T2_FLASH, T3_DISK
+
+
+@pytest.fixture()
+def engine(sage):
+    eng = sage.analytics(interpret=True)
+    yield eng
+    eng.close()
+
+
+def _events(sage, n_objects=4, rows=256, seed=0, container="events"):
+    """Container of (key, filter, value, part) int32 row tables."""
+    rng = np.random.default_rng(seed)
+    arrs = []
+    for i in range(n_objects):
+        a = np.empty((rows, 4), np.int32)
+        a[:, 0] = rng.integers(0, 7, rows)
+        a[:, 1] = rng.integers(0, 100, rows)
+        a[:, 2] = rng.integers(-40, 40, rows)
+        a[:, 3] = i
+        sage.put_array(f"{container}/{i:02d}", a, container=container)
+        arrs.append(a)
+    return np.vstack(arrs)
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def test_segment_reduce_int_exact(rng):
+    v = rng.integers(-99, 99, 3000).astype(np.int32)
+    ids = rng.integers(0, 200, 3000)        # 2 segment blocks
+    for op in K.OPS:
+        got = K.segment_reduce(v, ids, 200, op=op, interpret=True)
+        want = K.segment_reduce_ref(v, ids, 200, op=op)
+        assert got.dtype == want.dtype
+        assert (got == want).all(), op
+
+
+def test_segment_reduce_float_and_negative_ids(rng):
+    v = rng.normal(size=515).astype(np.float32)
+    ids = rng.integers(-3, 40, 515)         # negatives dropped
+    for op in K.OPS:
+        np.testing.assert_allclose(
+            K.segment_reduce(v, ids, 40, op=op, interpret=True),
+            K.segment_reduce_ref(v, ids, 40, op=op), rtol=1e-5, atol=1e-5)
+
+
+def test_segment_reduce_empty_segment_identity():
+    got = K.segment_reduce(np.array([1.0, 2.0]), np.array([0, 0]), 3,
+                           op="sum", interpret=True)
+    assert got[0] == 3.0 and got[1] == 0.0 and got[2] == 0.0
+
+
+def test_window_reduce_matches_ref(rng):
+    v = rng.integers(0, 50, 1000).astype(np.int32)
+    for op in K.OPS:
+        for slide in (None, 16):
+            got = K.window_reduce(v, 32, op=op, slide=slide, interpret=True)
+            want = K.window_reduce_ref(v, 32, op=op, slide=slide)
+            assert (got == want).all(), (op, slide)
+    assert K.window_reduce(v[:7], 32, op="sum", interpret=True).size == 0
+
+
+def test_histogram_matches_numpy(rng):
+    v = rng.normal(size=2000).astype(np.float32)
+    got = K.histogram(v, 32, (-3.0, 3.0), interpret=True)
+    want = K.histogram_ref(v, 32, (-3.0, 3.0))
+    assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# expressions + plans
+# ---------------------------------------------------------------------------
+
+def test_expr_eval_and_spec_roundtrip(rng):
+    rows = rng.normal(size=(50, 3))
+    e = ((col(0) * 2 + 1 > col(1)) & ~(col(2) <= 0.0)) | (col(1) == lit(0.0))
+    rebuilt = from_spec(e.to_spec())
+    want = ((rows[:, 0] * 2 + 1 > rows[:, 1]) & ~(rows[:, 2] <= 0.0)) \
+        | (rows[:, 1] == 0.0)
+    assert (e(rows) == want).all()
+    assert (rebuilt(rows) == want).all()
+
+
+def test_optimizer_splits_at_first_non_pushable():
+    ops = (Filter(col(0) > 1), Select((0, 1)), MapRows(lambda r: r),
+           Filter(col(1) > 0), Aggregate("sum", col(0)))
+    plan = optimize(ops)
+    assert [s["op"] for s in plan.frag_spec] == ["filter", "select"]
+    assert len(plan.local_ops) == 3
+    assert plan.merge == "scalar" and plan.agg == "sum"
+
+
+def test_optimizer_fuses_whole_pushable_chain():
+    ops = (Filter(col(0) > 1), Select((0, 2)), Aggregate("histogram",
+           col(1), 16, (0, 1)))
+    plan = optimize(ops)
+    assert len(plan.frag_spec) == 3 and not plan.local_ops
+    assert plan.merge == "histogram"
+
+
+def test_dataset_builder_rejects_bad_chains(engine):
+    ds = engine.scan("x")
+    with pytest.raises(ValueError):
+        ds.key_by(col(0)).filter(col(1) > 0)
+    with pytest.raises(ValueError):
+        ds.aggregate("sum", col(0)).filter(col(1) > 0)
+    with pytest.raises(ValueError):
+        ds.aggregate("nope")
+    with pytest.raises(ValueError):
+        ds.window(32, slide=0)
+    with pytest.raises(ValueError):
+        ds.aggregate("histogram", col(0), vrange=(1.0, 1.0))
+    with pytest.raises(ValueError):
+        ds.aggregate("histogram", col(0))        # vrange required
+    with pytest.raises(ValueError):              # grouped histogram
+        ds.key_by(col(0)).aggregate("histogram", col(1), vrange=(0, 1))
+    with pytest.raises(ValueError):              # grouped count() shortcut
+        ds.key_by(col(0)).count()
+
+
+def test_dangling_key_by_rejected_at_execution(sage, engine):
+    """A key_by with no terminal aggregate must error, not silently
+    return ungrouped rows."""
+    _events(sage, n_objects=1, rows=16)
+    with pytest.raises(ValueError, match="terminal aggregate"):
+        engine.run(engine.scan("events").key_by(col(0)))
+    with pytest.raises(ValueError, match="terminal aggregate"):
+        engine.run(engine.scan("events").window(4))
+
+
+def test_map_without_aggregate_applies_exactly_once(sage):
+    """Regression: the fetch-all path used to run the whole chain and
+    then re-apply the non-pushable tail, doubling every map."""
+    allr = _events(sage, n_objects=2, rows=32)
+    want = sorted((allr[:, :2] * 2).tolist())
+    for kw in ({}, {"pushdown": False}):
+        eng = sage.analytics(interpret=True, **kw)
+        got = eng.run(eng.scan("events").map(lambda r: r[:, :2] * 2)).value
+        assert sorted(got.tolist()) == want, kw
+        eng.close()
+    # also once when a pushable prefix precedes the map
+    eng = sage.analytics(interpret=True)
+    got = eng.run(eng.scan("events").select(0, 1)
+                  .map(lambda r: r * 2)).value
+    assert sorted(got.tolist()) == want
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# query correctness: pushdown == fetch-all == numpy
+# ---------------------------------------------------------------------------
+
+def test_filter_select_collect_matches_numpy(sage, engine):
+    allr = _events(sage)
+    got = engine.scan("events").filter(col(1) > 60).select(0, 2).collect()
+    want = allr[allr[:, 1] > 60][:, [0, 2]]
+    # partition-parallel order: compare as sorted row multisets
+    assert sorted(map(tuple, got.tolist())) == sorted(map(tuple,
+                                                          want.tolist()))
+
+
+def test_groupby_sum_pushdown_fetchall_numpy_agree(sage):
+    allr = _events(sage)
+    q = lambda eng: eng.scan("events").filter(col(1) > 30) \
+        .key_by(col(0)).aggregate("sum", value=col(2))
+    push = sage.analytics(interpret=True)
+    fetch = sage.analytics(pushdown=False, interpret=True)
+    rp = push.run(q(push))
+    rf = fetch.run(q(fetch))
+    pk, pv = rp.value
+    fk, fv = rf.value
+    m = allr[:, 1] > 30
+    wk = np.unique(allr[m][:, 0])
+    wv = np.array([allr[m][allr[m][:, 0] == k][:, 2].sum() for k in wk])
+    assert (pk == wk).all() and (pv == wv).all()
+    assert (fk == wk).all() and (fv == wv).all()
+    # pushdown moves only partials; fetch-all moves every raw byte
+    assert rp.stats.bytes_moved * 5 <= rf.stats.bytes_moved
+    assert rf.stats.bytes_moved == rf.stats.bytes_scanned
+    push.close(), fetch.close()
+
+
+def test_scalar_aggregates_match_numpy(sage, engine):
+    allr = _events(sage)
+    base = engine.scan("events").filter(col(1) >= 50)
+    m = allr[allr[:, 1] >= 50]
+    assert base.aggregate("count").collect() == m.shape[0]
+    assert base.aggregate("sum", col(2)).collect() == pytest.approx(
+        float(m[:, 2].sum()))
+    assert base.aggregate("mean", col(2)).collect() == pytest.approx(
+        m[:, 2].mean())
+    assert base.aggregate("min", col(2)).collect() == m[:, 2].min()
+    assert base.aggregate("max", col(2)).collect() == m[:, 2].max()
+
+
+def test_grouped_mean_and_min(sage, engine):
+    allr = _events(sage)
+    for agg in ("mean", "min"):
+        keys, vals = engine.scan("events").key_by(col(0)) \
+            .aggregate(agg, value=col(2)).collect()
+        for k, v in zip(keys, vals):
+            grp = allr[allr[:, 0] == k][:, 2]
+            want = grp.mean() if agg == "mean" else grp.min()
+            assert v == pytest.approx(want), (agg, k)
+
+
+def test_windowed_aggregate_per_partition(sage, engine):
+    allr = _events(sage, n_objects=3, rows=130)
+    got = engine.scan("events").window(32).aggregate(
+        "sum", value=col(2)).collect()
+    # 130 rows -> 4 complete windows per partition, tail dropped
+    assert got.shape == (12,)
+    per = [allr[allr[:, 3] == i][:, 2] for i in range(3)]
+    want = np.concatenate([K.window_reduce_ref(p, 32, op="sum")
+                           for p in per])
+    assert sorted(got.tolist()) == sorted(want.tolist())
+
+
+def test_histogram_query_matches_numpy(sage, engine):
+    allr = _events(sage)
+    got = engine.scan("events").aggregate(
+        "histogram", value=col(2), bins=16, vrange=(-40, 40)).collect()
+    want = np.histogram(allr[:, 2], bins=16, range=(-40, 40))[0]
+    assert (got == want).all()
+
+
+def test_map_runs_caller_side_and_chains(sage, engine):
+    allr = _events(sage)
+    ds = engine.scan("events").filter(col(1) > 50) \
+        .map(lambda r: r[:, :3] * 2, name="x2") \
+        .aggregate("max", value=col(2))
+    plan = engine.explain(ds)
+    assert "[caller] maprows" in plan
+    assert ds.collect() == allr[allr[:, 1] > 50][:, 2].max() * 2
+
+
+def test_join_matches_numpy(sage, engine):
+    _events(sage, n_objects=2, rows=64, container="lhs", seed=1)
+    _events(sage, n_objects=2, rows=64, container="rhs", seed=2)
+    l = engine.scan("lhs").filter(col(3) == 0).select(0, 2)
+    r = engine.scan("rhs").filter(col(3) == 1).select(0, 2)
+    got = engine.run(l.join(r, on=(0, 0))).value
+    lrows = engine.run(l).value
+    rrows = engine.run(r).value
+    want = [tuple(lr) + tuple(rr) for lr in lrows.tolist()
+            for rr in rrows.tolist() if lr[0] == rr[0]]
+    assert sorted(map(tuple, got.tolist())) == sorted(want)
+
+
+def test_join_spills_large_intermediates(sage):
+    eng = sage.analytics(interpret=True, spill_bytes=1024)
+    _events(sage, n_objects=2, rows=64, container="lhs", seed=1)
+    _events(sage, n_objects=2, rows=64, container="rhs", seed=2)
+    spilled = []
+    sage.fdmi_register(lambda ev, oid, info:
+                       spilled.append(oid) if ev == "create"
+                       and oid.startswith("analytics_spill/") else None)
+    res = eng.run(eng.scan("lhs").select(0, 2).join(
+        eng.scan("rhs").select(0, 2), on=(0, 0)))
+    assert res.stats.spilled_bytes > 0
+    assert spilled, "expected spill objects to be created"
+    # spill objects are transient: cleaned up after the join
+    assert sage.container("analytics_spill") == []
+    # and the spilled join agrees with the in-memory join
+    eng2 = sage.analytics(interpret=True)   # default threshold: no spill
+    want = eng2.run(eng2.scan("lhs").select(0, 2).join(
+        eng2.scan("rhs").select(0, 2), on=(0, 0)))
+    assert want.stats.spilled_bytes == 0
+    assert sorted(map(tuple, res.value.tolist())) == \
+        sorted(map(tuple, want.value.tolist()))
+    eng.close(), eng2.close()
+
+
+def test_count_and_explain(sage, engine):
+    allr = _events(sage)
+    assert engine.scan("events").count() == allr.shape[0]
+    txt = engine.scan("events").filter(col(1) > 0).explain()
+    assert "scan(events)" in txt and "[store] filter" in txt
+
+
+# ---------------------------------------------------------------------------
+# scheduling: tier + heat aware
+# ---------------------------------------------------------------------------
+
+def test_schedule_orders_fast_tier_first(sage, engine):
+    for i, tier in enumerate((T3_DISK, T1_NVRAM, T2_FLASH)):
+        sage.put_array(f"sch/{i}", np.ones((8, 2), np.float32),
+                       container="sch",
+                       layout=Layout(lay.STRIPED, tier, 2))
+    res = engine.run(engine.scan("sch").aggregate("count"))
+    assert res.stats.schedule == ["sch/1", "sch/2", "sch/0"]
+    # the cold T3 partition was promoted during the run
+    assert res.stats.prefetched == 1
+    assert sage.store.meta("sch/0").layout.tier == T2_FLASH
+
+
+def test_schedule_orders_hot_partitions_first_with_percipience(sage):
+    sage.enable_percipience(sync=True)
+    for i in range(3):
+        sage.put_array(f"hp/{i}", np.ones((8, 2), np.float32),
+                       container="hp",
+                       layout=Layout(lay.STRIPED, T2_FLASH, 2))
+    for _ in range(6):
+        sage.get_array("hp/2")          # heat up partition 2
+        time.sleep(0.025)               # defeat ADDB coalescing
+    eng = sage.analytics(interpret=True)
+    # force the policy onto the interpret path for CPU determinism
+    sage.percipience[2].interpret = True
+    res = eng.run(eng.scan("hp").aggregate("count"))
+    assert res.stats.schedule[0] == "hp/2"
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# stream → dataset bridge
+# ---------------------------------------------------------------------------
+
+def test_stream_tap_windowed_aggregate(engine):
+    tap = StreamTap()
+    ctx = StreamContext(n_producers=2, attach=tap)
+    vals = {"a": [], "b": []}
+    for i in range(100):
+        for p, sid in enumerate(("a", "b")):
+            v = float(i * (p + 1))
+            ctx.push(p, sid, np.array([v, v + 1.0], np.float32))
+            vals[sid].append(v)
+    assert ctx.close()
+    got = engine.from_stream(tap).window(16).aggregate(
+        "mean", value=col(0)).collect()
+    want = np.concatenate([K.window_reduce_ref(
+        np.asarray(vals[sid], np.float32), 16, op="sum") / 16.0
+        for sid in ("a", "b")])
+    np.testing.assert_allclose(np.sort(got), np.sort(want), rtol=1e-6)
+
+
+def test_stream_tap_rows_in_seq_order_despite_stealing(engine):
+    tap = StreamTap()
+    ctx = StreamContext(n_producers=4, attach=tap)
+    for i in range(200):
+        ctx.push(i % 4, "s", np.array([float(i)]))
+    assert ctx.close()
+    rows = tap.partitions()["s"]
+    assert rows.shape == (200, 1)
+    # per-producer seq order is preserved in the buffer ordering key
+    assert (np.sort(rows[:, 0]) == np.arange(200.0)).all()
+
+
+def test_tee_fans_out_to_multiple_attachments():
+    tap = StreamTap()
+    seen = []
+    ctx = StreamContext(n_producers=1, attach=tee(tap, lambda el:
+                                                  seen.append(el.seq)))
+    for i in range(10):
+        ctx.push(0, "t", np.array([i]))
+    assert ctx.close()
+    assert len(seen) == 10
+    assert tap.partitions()["t"].shape == (10, 1)

@@ -1,0 +1,162 @@
+"""FunctionShipper coverage: failure paths (retry exhaustion, failing
+objects inside container ships, async result ordering) plus the
+partial-aggregate and per-block shipping paths the analytics pushdown
+builds on."""
+import numpy as np
+import pytest
+
+from repro.core import FunctionShipper
+
+
+@pytest.fixture()
+def shipper(sage):
+    sh = FunctionShipper(sage, max_workers=4, max_retries=2)
+    yield sh
+    sh.shutdown()
+
+
+def _put_arrays(sage, n, rows=32, seed=0):
+    rng = np.random.default_rng(seed)
+    arrs = []
+    for i in range(n):
+        a = rng.normal(size=rows).astype(np.float32)
+        sage.put_array(f"fs/{i:02d}", a, container="fs")
+        arrs.append(a)
+    return arrs
+
+
+# ---------------------------------------------------------------------------
+# failure paths
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_exhaustion_reports_error(sage, shipper):
+    """A function that always raises fails after exactly max_retries
+    retries, with the exception captured, not raised."""
+    calls = []
+
+    def boom(arr):
+        calls.append(1)
+        raise RuntimeError("shipped function exploded")
+
+    shipper.register("boom", boom)
+    _put_arrays(sage, 1)
+    res = shipper.ship("boom", "fs/00")
+    assert not res.ok
+    assert res.retries == shipper.max_retries
+    assert "shipped function exploded" in res.error
+    assert len(calls) == shipper.max_retries + 1   # initial try + retries
+
+
+def test_retry_recovers_from_transient_failure(sage, shipper):
+    """Failures up to the retry budget are absorbed; the result reports
+    how many retries it took."""
+    state = {"left": 2}
+
+    def flaky(arr):
+        if state["left"] > 0:
+            state["left"] -= 1
+            raise IOError("transient")
+        return float(arr.sum())
+
+    shipper.register("flaky", flaky)
+    [a] = _put_arrays(sage, 1)
+    res = shipper.ship("flaky", "fs/00")
+    assert res.ok and res.retries == 2
+    assert res.value == pytest.approx(float(a.sum()), rel=1e-5)
+
+
+def test_ship_to_container_isolates_failing_object(sage, shipper):
+    """One unreadable object must not poison the container ship: its
+    result carries ok=False while every other object still computes."""
+    arrs = _put_arrays(sage, 4)
+    # make fs/02 unreadable at every replica (both devices per tier)
+    meta = sage.store.meta("fs/02")
+    for pool in sage.store.pools.values():
+        for dev in pool.devices:
+            prefix = "fs__02/"
+            for key in list(dev.list_blocks()):
+                if key.startswith(prefix):
+                    dev.delete_block(key)
+    results = {r.oid: r for r in shipper.ship_to_container("sum", "fs")}
+    assert len(results) == 4
+    assert not results["fs/02"].ok
+    assert results["fs/02"].retries == shipper.max_retries
+    for i in (0, 1, 3):
+        r = results[f"fs/{i:02d}"]
+        assert r.ok
+        assert r.value == pytest.approx(float(arrs[i].sum()), rel=1e-4)
+
+
+def test_ship_unknown_function_fails_fast(sage, shipper):
+    _put_arrays(sage, 1)
+    res = shipper.ship("definitely-not-registered", "fs/00")
+    assert not res.ok and res.retries == 0
+    assert "unknown function" in res.error
+
+
+def test_ship_async_result_ordering(sage, shipper):
+    """ship_async futures resolve to their own object's result no matter
+    the completion order — results must never cross-talk between oids."""
+    import time
+
+    arrs = _put_arrays(sage, 8)
+
+    def slow_ident(arr):
+        # earlier-submitted objects sleep longer, inverting completion order
+        time.sleep(float(arr[0] % 0.01))
+        return float(arr.sum())
+
+    shipper.register("slow_sum", slow_ident)
+    futs = [(i, shipper.ship_async("slow_sum", f"fs/{i:02d}"))
+            for i in range(8)]
+    for i, fut in futs:
+        res = fut.result(timeout=30)
+        assert res.oid == f"fs/{i:02d}"
+        assert res.ok
+        assert res.value == pytest.approx(float(arrs[i].sum()), rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# partial aggregates + per-block shipping
+# ---------------------------------------------------------------------------
+
+def test_builtin_partial_aggregates_match_numpy(sage, shipper):
+    arrs = _put_arrays(sage, 5)
+    allv = np.concatenate(arrs).astype(np.float64)
+    for name, want in (("sum", allv.sum()), ("count", allv.size),
+                       ("mean", allv.mean()), ("min", allv.min()),
+                       ("max", allv.max())):
+        got, results = shipper.ship_partial(name, "fs")
+        assert all(r.ok for r in results)
+        assert got == pytest.approx(float(want), rel=1e-5)
+
+
+def test_ship_partial_skips_failed_objects(sage, shipper):
+    arrs = _put_arrays(sage, 3)
+    for pool in sage.store.pools.values():
+        for dev in pool.devices:
+            for key in list(dev.list_blocks()):
+                if key.startswith("fs__01/"):
+                    dev.delete_block(key)
+    got, results = shipper.ship_partial("sum", "fs")
+    by_oid = {r.oid: r for r in results}
+    assert not by_oid["fs/01"].ok
+    want = float(arrs[0].sum() + arrs[2].sum())
+    assert got == pytest.approx(want, rel=1e-4)
+
+
+def test_ship_partial_unknown_aggregate_raises(sage, shipper):
+    with pytest.raises(KeyError):
+        shipper.ship_partial("nope", "fs")
+
+
+def test_ship_blocks_returns_per_block_results(sage, shipper):
+    payload = bytes(range(256)) * 10          # 2560 bytes
+    sage.create("blk/x", block_size=1024, container="blk")
+    sage.put("blk/x", payload)
+    res = shipper.ship_blocks("checksum", "blk/x")
+    assert res.ok
+    assert len(res.value) == 3                # 1024 + 1024 + 512
+    import zlib
+    want = [zlib.crc32(payload[i * 1024: (i + 1) * 1024]) for i in range(3)]
+    assert res.value == want

@@ -172,6 +172,75 @@ def test_percipient_policy_promotes_hot_demotes_stale(sage):
     assert pol.decide(sage.store.meta("p/cold"), now + 3600) == DEMOTE
 
 
+def test_watermark_eviction_ranks_victims_by_heat(sage):
+    """Under watermark pressure a heat-aware scorer evicts the coldest-
+    by-heat object first, even when raw LRU order disagrees."""
+    from repro.core import HsmPolicy
+
+    class HeatOnly:
+        heat = {"e/cold": 0.01, "e/hot": 9.0}
+
+        def decide(self, meta, now):
+            return None                  # pressure path only
+
+        def heat_of(self, oid, now=None):
+            return self.heat.get(oid, 1.0)
+
+    for oid in ("e/cold", "e/hot"):
+        sage.put_array(oid, np.ones(64, np.float32),
+                       layout=Layout(lay.STRIPED, T2_FLASH, 2))
+    # LRU would pick e/hot (older last_access); heat must win instead
+    sage.store.meta("e/hot").last_access -= 1_000
+    hsm = HsmDaemon(sage.store, policy=HsmPolicy(high_watermark=0.0),
+                    scorer=HeatOnly())
+    hsm.scan_once()
+    from_t2 = [oid for oid, src, _ in hsm.migrations if src == T2_FLASH]
+    assert from_t2 and from_t2[0] == "e/cold"
+
+
+def test_watermark_eviction_does_not_conflate_unknown_with_cold(sage):
+    """A never-observed object read recently must outrank (survive) an
+    observed object whose heat has decayed — PercipientPolicy.victim_rank
+    scores the unknown by a single-access proxy at last_access instead
+    of heat 0."""
+    from repro.core import HsmPolicy
+
+    # u/fresh exists before the extractor attaches: pre-attach traffic
+    # is exactly the "never observed" case
+    sage.put_array("u/fresh", np.ones(64, np.float32),
+                   layout=Layout(lay.STRIPED, T2_FLASH, 2))
+    ex = FeatureExtractor().attach(sage.store)
+    pol = PercipientPolicy(ex, half_life_s=0.05, interpret=True)
+    sage.put_array("u/observed", np.ones(64, np.float32),
+                   layout=Layout(lay.STRIPED, T2_FLASH, 2))
+    sage.get_array("u/observed")        # observed...
+    time.sleep(0.3)                     # ...but heat fully decayed
+    now = time.time()
+    sage.store.meta("u/fresh").last_access = now   # recently touched
+    assert ex.access_count("u/fresh") == 0
+    assert pol.victim_rank(sage.store.meta("u/fresh"), now) > \
+        pol.victim_rank(sage.store.meta("u/observed"), now)
+    hsm = HsmDaemon(sage.store, policy=HsmPolicy(high_watermark=0.0),
+                    scorer=pol)
+    hsm._relieve_pressure()
+    from_t2 = [oid for oid, src, _ in hsm.migrations if src == T2_FLASH]
+    assert from_t2 and from_t2[0] == "u/observed"
+
+
+def test_watermark_eviction_lru_fallback_without_heat(sage):
+    """Scorers without heat_of keep the historical LRU victim order."""
+    from repro.core import HsmPolicy
+
+    for oid in ("l/new", "l/old"):
+        sage.put_array(oid, np.ones(64, np.float32),
+                       layout=Layout(lay.STRIPED, T2_FLASH, 2))
+    sage.store.meta("l/old").last_access -= 1_000
+    hsm = HsmDaemon(sage.store, policy=HsmPolicy(high_watermark=0.0))
+    hsm.scan_once()
+    from_t2 = [oid for oid, src, _ in hsm.migrations if src == T2_FLASH]
+    assert from_t2 and from_t2[0] == "l/old"
+
+
 # ---------------------------------------------------------------------------
 # prefetcher
 # ---------------------------------------------------------------------------
