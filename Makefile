@@ -2,11 +2,16 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-percipience bench-analytics
+.PHONY: test bench bench-percipience bench-analytics docs-check
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
+
+# docs link check + syntax-rot check (what CI's docs job runs)
+docs-check:
+	$(PYTHON) tools/check_docs_links.py
+	$(PYTHON) -m compileall -q src
 
 bench:
 	$(PYTHON) -m benchmarks.run --quick

@@ -5,19 +5,24 @@ data' for the ALF/Spectre/Savu-class workloads).
 Architecture:
 
     Dataset (declarative plan)          exprs.col / filter / select /
-        │  optimize()                   key_by / window / aggregate / join
+        │  optimize(cost_ctx)           key_by / window / aggregate / join
         ▼
     PhysicalPlan  = storage fragment ++ caller tail ++ merge
-        │  AnalyticsEngine.run()
-        ▼
+        │            ++ per-partition placement (cost.py: ship / fetch /
+        │  AnalyticsEngine.run()           cached, from tier models,
+        ▼                                  heat, selectivity stats)
     FunctionShipper  ── fragment per object, partials back ──▶ merge
-        (tier/heat-aware schedule via percipience; spill via Clovis)
+        (tier/heat-aware schedule via percipience; spill via Clovis;
+         shipped fragments piggyback StatsCatalog summaries)
 
 Aggregation hot paths run on Pallas kernels (kernels.py) with
 interpret-mode CPU fallback and pure-numpy references.
 
 Entry point: ``Clovis.analytics()`` or ``AnalyticsEngine(clovis)``.
 """
+from repro.analytics.cost import (CostModel, Decision,  # noqa: F401
+                                  PartitionStats, StatsCatalog,
+                                  summarize_rows)
 from repro.analytics.dataset import Dataset  # noqa: F401
 from repro.analytics.executor import (AnalyticsEngine,  # noqa: F401
                                       AnalyticsError, QueryResult,

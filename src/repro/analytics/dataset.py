@@ -1,9 +1,12 @@
-"""Dataset — the Flink-shaped declarative query API.
+"""Dataset — the Flink-shaped declarative query API of SAGE's Data
+Analytics layer (paper §4.1: Big Data frameworks programming directly
+against percipient storage, the ALF/Spectre/Savu use cases).
 
 A Dataset is an immutable (source, op-chain) pair; every fluent call
 returns a new Dataset.  Nothing executes until ``collect()`` /
 ``count()`` / ``engine.run()`` — the chain is a logical plan the
-optimizer splits into a storage-side fragment and a caller-side tail.
+optimizer splits into a storage-side fragment and a caller-side tail,
+then places per partition with the cost model (cost.py).
 
     eng = clovis.analytics()
     res = (eng.scan("events")

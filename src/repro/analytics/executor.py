@@ -1,11 +1,14 @@
-"""Partition-parallel query executor — pushdown, tier-aware scheduling,
-spill.
+"""Partition-parallel query executor — SAGE's in-storage analytics run
+loop: costed pushdown, tier-aware scheduling, spill (paper §4.1).
 
 Execution of a container query:
 
-  1. the optimizer's fragment is registered with ``FunctionShipper`` and
-     shipped per object, so filters/projections/partial aggregations run
-     *at the store* and only reduced partials cross back;
+  1. the optimizer places each partition independently (cost.py): the
+     fused fragment **ships** to the store via ``FunctionShipper``, the
+     raw bytes **fetch** to the caller, or a **cached** prior partial is
+     reused — chosen from tier latency/bandwidth, percipience heat, and
+     selectivity statistics, with cold-start partitions defaulting to
+     ship (PR 2's always-push behaviour);
   2. per-object tasks are scheduled tier-aware: partitions already on
      fast tiers (and, when percipience is attached, with high predicted
      heat) run first, while cold slow-tier partitions are promoted in the
@@ -15,20 +18,32 @@ Execution of a container query:
   4. join intermediates larger than ``spill_bytes`` grace-partition into
      a spill container placed by RTHMS ``recommend_tier``.
 
+Every placement decision lands in ADDB (op ``analytics_plan``; see
+``Addb.plan_trace``) so chosen-plan quality is auditable against the
+always-push / always-fetch oracles.  Shipped fragments piggyback
+partition-stats summaries when the catalog is stale, so statistics
+accrue as a side effect of running queries.
+
 ``pushdown=False`` fetches whole objects to the caller and runs the
 identical op interpreter locally — the fetch-all baseline the benchmark
-compares bytes-moved against.
+compares bytes-moved against.  ``cost_based=False`` restores uniform
+always-push (the always-push oracle).
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analytics.cost import (CACHED, FETCH, SHIP, STATS_KEY,
+                                  ComputeModel, CostContext, CostModel,
+                                  NetworkModel, StatsCatalog, frag_cache_key)
 from repro.analytics.dataset import (ContainerSource, Dataset, JoinSource,
                                      StreamSource)
 from repro.analytics.plan import (KernelCfg, PhysicalPlan, apply_ops,
@@ -40,6 +55,9 @@ from repro.core.tiers import T2_FLASH, T3_DISK, T4_ARCHIVE, TIER_ORDER
 
 _TIER_RANK = {t: i for i, t in enumerate(TIER_ORDER)}
 _SLOW_TIERS = (T3_DISK, T4_ARCHIVE)
+
+# distinguishes ADDB decision-trace tags across engines sharing one ADDB
+_ENGINE_SEQ = itertools.count(1)
 
 
 class AnalyticsError(RuntimeError):
@@ -54,7 +72,10 @@ class QueryStats:
     bytes_moved: int = 0            # bytes crossing to the caller
     spilled_bytes: int = 0
     prefetched: int = 0             # cold partitions staged during the run
+    cache_hits: int = 0             # partitions served from cached partials
     schedule: List[str] = field(default_factory=list)
+    decisions: Dict[str, str] = field(default_factory=dict)  # oid -> mode
+    query_tag: str = ""             # ADDB decision-trace key (plan_trace)
     plan: str = ""
     wall_s: float = 0.0
 
@@ -82,23 +103,44 @@ def _nbytes(v) -> int:
 
 class AnalyticsEngine:
     def __init__(self, clovis, *, shipper: Optional[FunctionShipper] = None,
-                 pushdown: bool = True, use_kernels: bool = True,
+                 pushdown: bool = True, cost_based: bool = True,
+                 stats: Optional[StatsCatalog] = None,
+                 net: Optional[NetworkModel] = None,
+                 compute: Optional[ComputeModel] = None,
+                 use_kernels: bool = True,
                  interpret: bool = False, max_workers: int = 4,
                  spill_bytes: int = 4 << 20,
                  spill_container: str = "analytics_spill",
-                 prefetch_cold: bool = True):
+                 prefetch_cold: bool = True,
+                 partial_cache_size: int = 128):
         self.clovis = clovis
         self.shipper = shipper or FunctionShipper(clovis,
                                                   max_workers=max_workers)
         self._own_shipper = shipper is None
         self.pushdown = pushdown
+        self.cost_based = cost_based
+        self._own_stats = stats is None
+        self.stats = (stats if stats is not None
+                      else StatsCatalog().attach(clovis.store))
+        self.stats.attach_shipper(self.shipper)
+        self.cost_model = CostModel(net=net, compute=compute)
         self.kcfg = KernelCfg(use_kernel=use_kernels, interpret=interpret)
         self.max_workers = max_workers
         self.spill_bytes = spill_bytes
         self.spill_container = spill_container
         self.prefetch_cold = prefetch_cold
         self._qid = 0
+        self._etag = f"analytics/e{next(_ENGINE_SEQ)}"
         self._lock = threading.Lock()
+        self._partial_cache: "OrderedDict[Tuple[str, str, int], Any]" = \
+            OrderedDict()
+        self._partial_cache_size = partial_cache_size
+        self._cache_lock = threading.Lock()
+        # content can change without a version increase (append keeps the
+        # version; delete+recreate resets it), so the version-keyed cache
+        # additionally invalidates on store writes and deletes
+        clovis.store.register_write_hook(self._cache_invalidate)
+        clovis.store.fdmi_register(self._cache_on_fdmi)
 
     # ------------------------------------------------------------------
     # dataset constructors
@@ -114,18 +156,105 @@ class AnalyticsEngine:
         return Dataset(self, StreamSource(tap))
 
     def explain(self, ds: Dataset) -> str:
-        plan = optimize(ds.ops, pushdown=self._can_push(ds))
         src = ds.source
         if isinstance(src, ContainerSource):
             head = f"scan({src.container})"
+            oids = self._schedule(self.clovis.container(src.container))
+            plan = self._make_plan(ds, oids)
         elif isinstance(src, StreamSource):
             head = "from_stream"
+            plan = optimize(ds.ops, pushdown=False)
         else:
             head = f"join(on={src.on})"
+            plan = optimize(ds.ops, pushdown=False)
         return f"{head}\n{plan.describe()}"
 
     def _can_push(self, ds: Dataset) -> bool:
         return self.pushdown and isinstance(ds.source, ContainerSource)
+
+    # ------------------------------------------------------------------
+    # planning (cost-based placement)
+    # ------------------------------------------------------------------
+
+    def _make_plan(self, ds: Dataset, oids: List[str]) -> PhysicalPlan:
+        push = self._can_push(ds)
+        ctx = None
+        if push and self.cost_based:
+            ctx = CostContext(model=self.cost_model,
+                              store=self.clovis.store, oids=oids,
+                              catalog=self.stats,
+                              load=self._load(oids),
+                              cache_probe=self._cache_probe)
+        return optimize(ds.ops, pushdown=push, cost_ctx=ctx)
+
+    def _policy_map(self, oids: List[str], method: str) -> Dict[str, float]:
+        """Query the percipience policy (clovis.percipience[2]) for a
+        per-oid map; {} when percipience is absent or the policy errors
+        (prediction is advisory, never load-bearing)."""
+        percip = getattr(self.clovis, "percipience", None)
+        if not percip:
+            return {}
+        try:
+            return getattr(percip[2], method)(oids)
+        except Exception:
+            return {}
+
+    def _load(self, oids: List[str]) -> Dict[str, float]:
+        """Per-partition storage-side contention from percipience heat
+        (empty when percipience is not attached)."""
+        return self._policy_map(oids, "load_factor")
+
+    # -- partial cache (fragment results keyed by object version) ------
+
+    def _cache_invalidate(self, oid: str, nbytes: int = 0):
+        """Drop every cached partial for ``oid`` — store write hook
+        (append keeps the version) and FDMI delete (recreate resets it)
+        both punch through the version key."""
+        with self._cache_lock:
+            for key in [k for k in self._partial_cache if k[1] == oid]:
+                del self._partial_cache[key]
+
+    def _cache_on_fdmi(self, event: str, oid: str, info: Dict):
+        if event == "delete":
+            self._cache_invalidate(oid)
+
+    def _cache_key(self, frag_key: str, oid: str
+                   ) -> Optional[Tuple[str, str, int]]:
+        try:
+            return (frag_key, oid, self.clovis.store.meta(oid).version)
+        except KeyError:
+            return None
+
+    def _cache_probe(self, frag_key: str, oid: str) -> bool:
+        key = self._cache_key(frag_key, oid)
+        if key is None:
+            return False
+        with self._cache_lock:
+            return key in self._partial_cache
+
+    def _cache_get(self, frag_key: str, oid: str):
+        key = self._cache_key(frag_key, oid)
+        if key is None:
+            return None
+        with self._cache_lock:
+            val = self._partial_cache.get(key)
+            if val is not None:
+                self._partial_cache.move_to_end(key)
+            return val
+
+    def _cache_put(self, frag_key: str, oid: str, partial, version: int):
+        """Insert under the version captured *before* the data was read
+        (versions are monotonic, so the entry can never claim a newer
+        version than the bytes it was computed from — a concurrent
+        write just strands the entry at the old, unreachable key)."""
+        if version < 0 or partial is None:
+            return
+        key = (frag_key, oid, version)
+        with self._cache_lock:
+            self._partial_cache[key] = partial
+            self._partial_cache.move_to_end(key)
+            while len(self._partial_cache) > self._partial_cache_size:
+                self._partial_cache.popitem(last=False)
 
     # ------------------------------------------------------------------
     # execution
@@ -136,21 +265,22 @@ class AnalyticsEngine:
         stats = QueryStats(pushdown=self._can_push(ds))
         if isinstance(ds.source, JoinSource):
             value = self._run_join(ds, stats)
-        else:
-            plan = optimize(ds.ops, pushdown=self._can_push(ds))
+        elif isinstance(ds.source, StreamSource):
+            plan = optimize(ds.ops, pushdown=False)
             stats.plan = plan.describe()
-            partials = self._run_partitions(ds, plan, stats)
+            partials = self._run_stream(ds, stats)
+            value = merge_partials(plan, partials, self.kcfg)
+        else:
+            oids = self._schedule(
+                self.clovis.container(ds.source.container))
+            plan = self._make_plan(ds, oids)
+            stats.plan = plan.describe()
+            partials = self._run_container(ds, plan, oids, stats)
             value = merge_partials(plan, partials, self.kcfg)
         stats.wall_s = time.perf_counter() - t0
         return QueryResult(value, stats)
 
     # -- partition execution -------------------------------------------
-
-    def _run_partitions(self, ds: Dataset, plan: PhysicalPlan,
-                        stats: QueryStats) -> List[Any]:
-        if isinstance(ds.source, StreamSource):
-            return self._run_stream(ds, stats)
-        return self._run_container(ds, plan, stats)
 
     def _run_stream(self, ds: Dataset, stats: QueryStats) -> List[Any]:
         parts = ds.source.tap.partitions()
@@ -165,38 +295,74 @@ class AnalyticsEngine:
         return out
 
     def _run_container(self, ds: Dataset, plan: PhysicalPlan,
-                       stats: QueryStats) -> List[Any]:
+                       oids: List[str], stats: QueryStats) -> List[Any]:
         store = self.clovis.store
-        oids = self._schedule(self.clovis.container(ds.source.container))
         stats.schedule = list(oids)
         stats.partitions = len(oids)
         use_ship = plan.pushdown and bool(plan.frag_spec)
+        decisions = plan.decisions or {}
+        frag_key = frag_cache_key(plan.frag_spec) if plan.frag_spec else ""
 
-        frag_name = None
+        with self._lock:
+            self._qid += 1
+            qtag = f"{self._etag}/q{self._qid}"
+        frag_name = f"{qtag}/frag"
+        frag_stats_name = f"{qtag}/frag+stats"
         if use_ship:
-            with self._lock:
-                self._qid += 1
-                frag_name = f"analytics/q{self._qid}"
-            self.shipper.register(frag_name,
-                                  compile_fragment(plan.frag_spec, self.kcfg))
+            self.shipper.register(
+                frag_name, compile_fragment(plan.frag_spec, self.kcfg))
+            self.shipper.register(
+                frag_stats_name,
+                compile_fragment(plan.frag_spec, self.kcfg,
+                                 collect_stats=True))
 
-        staged = self._stage_cold(oids, stats) if self.prefetch_cold else {}
+        if decisions:
+            stats.query_tag = qtag
+            for oid, d in decisions.items():
+                self.clovis.addb.record_decision(qtag, oid, d.mode,
+                                                 d.est_moved, d.est_s)
+
+        # never stage a CACHED partition: its plan needs zero I/O, and
+        # migration would bump the version and defeat the cache hit
+        stageable = [o for o in oids
+                     if o not in decisions or decisions[o].mode != CACHED]
+        staged = (self._stage_cold(stageable, stats)
+                  if self.prefetch_cold else {})
         errors: List[str] = []
         lock = threading.Lock()
 
         def task(oid: str):
+            d = decisions.get(oid)
+            mode = d.mode if d is not None else (SHIP if use_ship else FETCH)
+            if mode == CACHED:
+                partial = self._cache_get(frag_key, oid)
+                if partial is not None:
+                    with lock:
+                        stats.cache_hits += 1
+                        stats.decisions[oid] = CACHED
+                    if plan.local_ops:
+                        partial = apply_ops(plan.local_ops, partial[1],
+                                            self.kcfg)
+                    return partial
+                mode = SHIP if use_ship else FETCH   # raced invalidation
             fut = staged.get(oid)
             if fut is not None:
                 fut.result()                 # promotion finished (or failed)
             size = store.read_size(oid)
-            if use_ship:
-                res = self.shipper.ship(frag_name, oid)
+            if mode == SHIP and use_ship:
+                name = frag_name
+                if self.cost_based and not self.stats.fresh(oid):
+                    name = frag_stats_name   # piggyback a stats refresh
+                res = self.shipper.ship(name, oid)
                 if not res.ok:
                     with lock:
                         errors.append(f"{oid}: {res.error}")
                     return None
                 partial = res.value
                 moved = _nbytes(partial)
+                if isinstance(partial, dict) and STATS_KEY in partial:
+                    partial = partial["partial"]
+                self._cache_put(frag_key, oid, partial, res.version)
                 if plan.local_ops:
                     # the fragment never aggregates when a caller tail
                     # exists, so its output is always rows
@@ -204,12 +370,21 @@ class AnalyticsEngine:
                                         self.kcfg)
             else:
                 # whole chain runs caller-side on the fetched object
+                try:
+                    version = store.meta(oid).version
+                except KeyError:
+                    version = -1
                 arr = self._fetch(oid)
                 moved = arr.nbytes
                 partial = apply_ops(ds.ops, arr, self.kcfg)
+                if use_ship and not plan.local_ops:
+                    # no caller tail: the full-chain result IS the
+                    # fragment partial, so it is cacheable
+                    self._cache_put(frag_key, oid, partial, version)
             with lock:
                 stats.bytes_scanned += size
                 stats.bytes_moved += moved
+                stats.decisions[oid] = mode
             return partial
 
         try:
@@ -218,28 +393,22 @@ class AnalyticsEngine:
                                     ) as pool:
                 partials = list(pool.map(task, oids))
         finally:
-            if frag_name is not None:
+            if use_ship:
                 self.shipper.unregister(frag_name)
+                self.shipper.unregister(frag_stats_name)
         if errors:
             raise AnalyticsError("; ".join(errors))
         return partials
 
     def _fetch(self, oid: str) -> np.ndarray:
-        """Fetch-all path: the whole object crosses to the caller (same
+        """Fetch path: the whole object crosses to the caller (same
         materialization rule the storage-side shipper uses)."""
         return self.clovis.materialize(oid)
 
     # -- tier/heat-aware scheduling ------------------------------------
 
     def _heat(self, oids: List[str]) -> Dict[str, float]:
-        percip = getattr(self.clovis, "percipience", None)
-        if not percip:
-            return {}
-        policy = percip[2]
-        try:
-            return policy.heat_map(oids)
-        except Exception:
-            return {}
+        return self._policy_map(oids, "heat_map")
 
     def _schedule(self, oids: List[str]) -> List[str]:
         """Hot/fast-tier partitions first: they run while cold ones are
@@ -285,7 +454,9 @@ class AnalyticsEngine:
             stats.partitions += side.stats.partitions
             stats.bytes_scanned += side.stats.bytes_scanned
             stats.bytes_moved += side.stats.bytes_moved
+            stats.cache_hits += side.stats.cache_hits
             stats.schedule.extend(side.stats.schedule)
+            stats.decisions.update(side.stats.decisions)
         lrows, rrows = np.atleast_2d(lres.value), np.atleast_2d(rres.value)
         joined = self._join_rows(lrows, rrows, src.on, stats)
         if not ds.ops:
@@ -350,6 +521,16 @@ class AnalyticsEngine:
                     pass
 
     def close(self):
+        if self._own_stats:
+            # engine-private catalog: unhook it everywhere so
+            # short-lived engines don't accrete hooks on a long-lived
+            # stack.  A shared catalog's shipper observer stays: other
+            # engines on the same shipper still harvest through it, and
+            # the catalog outlives its engines by design.
+            self.shipper.remove_observer(self.stats._on_ship)
+            self.stats.detach()
+        self.clovis.store.unregister_write_hook(self._cache_invalidate)
+        self.clovis.store.fdmi_unregister(self._cache_on_fdmi)
         if self._own_shipper:
             self.shipper.shutdown()
 

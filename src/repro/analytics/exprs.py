@@ -1,10 +1,13 @@
-"""Column expression DSL — the serialisable predicate/projection language.
+"""Column expression DSL — the serialisable predicate/projection
+language of SAGE's function-shipping contract (paper §3.2.1: shipped
+computations are descriptions, not code).
 
 Pushdown must not ship Python closures: a fragment that runs *at the
 store* is described entirely by a JSON-able spec so the storage-side
 executor can rebuild it without trusting caller bytecode (and so the
-plan is printable).  ``col(i)`` and ``lit(v)`` build small ASTs with
-numpy operator overloading:
+plan is printable, and the cost model can estimate predicate
+selectivity by walking the same spec).  ``col(i)`` and ``lit(v)`` build
+small ASTs with numpy operator overloading:
 
     pred = (col(1) > 0.5) & (col(0) % 2 == 0)
     keep = pred(rows)          # (n,) bool over a (n, ncols) array
@@ -44,6 +47,11 @@ class Expr:
     def to_spec(self) -> Dict:
         raise NotImplementedError
 
+    def columns(self) -> set:
+        """Column indices this expression reads (stats collection and
+        selectivity estimation introspect the AST through this)."""
+        return set()
+
     # -- operator overloading builds the AST --
 
     def _bin(self, op: str, other, flip: bool = False) -> "Expr":
@@ -82,6 +90,9 @@ class Col(Expr):
     def to_spec(self) -> Dict:
         return {"t": "col", "i": self.i}
 
+    def columns(self) -> set:
+        return {self.i}
+
     def __repr__(self):
         return f"col({self.i})"
 
@@ -94,7 +105,10 @@ class Lit(Expr):
         return self.v
 
     def to_spec(self) -> Dict:
-        return {"t": "lit", "v": self.v}
+        # numpy scalars (e.g. arr.max()) coerce to plain Python so the
+        # spec stays JSON-able and selectivity-estimable
+        v = self.v.item() if isinstance(self.v, np.generic) else self.v
+        return {"t": "lit", "v": v}
 
     def __repr__(self):
         return repr(self.v)
@@ -113,6 +127,9 @@ class BinOp(Expr):
         return {"t": "bin", "op": self.op, "l": self.l.to_spec(),
                 "r": self.r.to_spec()}
 
+    def columns(self) -> set:
+        return self.l.columns() | self.r.columns()
+
     def __repr__(self):
         return f"({self.l!r} {self.op} {self.r!r})"
 
@@ -126,6 +143,9 @@ class Not(Expr):
 
     def to_spec(self) -> Dict:
         return {"t": "not", "e": self.e.to_spec()}
+
+    def columns(self) -> set:
+        return self.e.columns()
 
     def __repr__(self):
         return f"~{self.e!r}"

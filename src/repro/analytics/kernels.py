@@ -1,5 +1,7 @@
 """Aggregation hot-path kernels: segmented group-by reduce, windowed
-reductions, histogram.
+reductions, histogram — the TPU-era stand-ins for SAGE's in-storage
+compute primitives (paper §4.1: the reductions its Data Analytics
+layer runs next to the data).
 
 Layout follows the percipience heat-scan idiom (percipience/heat.py):
 inputs are padded to f32/int32 tile multiples (8, 128), the grid is

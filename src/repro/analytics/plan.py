@@ -1,4 +1,7 @@
-"""Logical plan, optimizer, and fragment execution for dataflow queries.
+"""Logical plan, optimizer, and fragment execution for dataflow queries
+— SAGE's in-storage analytics (paper §4.1) with the paper's
+'decide-where-computation-runs' claim implemented as a cost-based
+optimizer.
 
 A ``Dataset`` builds a linear chain of logical ops over a source
 (container scan, stream tap, or join).  The optimizer splits the chain
@@ -19,6 +22,12 @@ same ``apply_ops`` interpreter, so pushdown and fetch-all produce
 identical results by construction.  Stage fusion falls out of the same
 design: one fragment evaluates the whole prefix in a single pass over
 the partition instead of materialising per-stage intermediates.
+
+When a ``cost_ctx`` (analytics.cost.CostContext) is supplied, fragment
+*placement* additionally becomes a costed decision **per partition**:
+each object independently ships the fragment, fetches raw bytes, or
+reuses a cached prior partial, based on tier latency/bandwidth,
+percipience heat, and selectivity statistics (see cost.py).
 """
 from __future__ import annotations
 
@@ -126,10 +135,14 @@ class PhysicalPlan:
     merge: str                          # rows | scalar | group | window | histogram
     agg: Optional[str] = None           # aggregate op for merged kinds
     pushdown: bool = True
+    decisions: Optional[Dict[str, Any]] = None   # oid -> cost.Decision
 
     def describe(self) -> str:
         lines = []
-        where = "store" if (self.pushdown and self.frag_spec) else "caller"
+        if self.decisions:
+            where = "costed"
+        else:
+            where = "store" if (self.pushdown and self.frag_spec) else "caller"
         for s in self.frag_spec:
             lines.append(f"  [{where}] {s['op']}"
                          + (f" {s.get('agg')}" if s["op"] == "aggregate" else ""))
@@ -137,12 +150,22 @@ class PhysicalPlan:
             lines.append(f"  [caller] {type(op).__name__.lower()}")
         lines.append(f"  [merge] {self.merge}"
                      + (f"({self.agg})" if self.agg else ""))
+        if self.decisions:
+            modes = [d.mode for d in self.decisions.values()]
+            counts = " ".join(f"{m}={modes.count(m)}"
+                              for m in ("ship", "fetch", "cached"))
+            lines.append(f"  [placement] {counts} (cost-based, "
+                         f"{len(modes)} partitions)")
         return "\n".join(lines)
 
 
-def optimize(ops: Sequence[Op], *, pushdown: bool = True) -> PhysicalPlan:
+def optimize(ops: Sequence[Op], *, pushdown: bool = True,
+             cost_ctx=None) -> PhysicalPlan:
     """Split the op chain at the first non-pushable op and derive the
-    merge kind from the terminal op."""
+    merge kind from the terminal op.  With a ``cost_ctx``
+    (analytics.cost.CostContext), fragment placement additionally
+    becomes a per-partition costed decision — ship / fetch / cached —
+    stored on ``plan.decisions``."""
     ops = list(ops)
     if any(isinstance(o, (KeyBy, Window)) for o in ops):
         if not (ops and isinstance(ops[-1], Aggregate)):
@@ -171,8 +194,11 @@ def optimize(ops: Sequence[Op], *, pushdown: bool = True) -> PhysicalPlan:
             merge = "window"
         else:
             merge = "scalar"
-    return PhysicalPlan([op_to_spec(o) for o in frag], local, merge,
+    plan = PhysicalPlan([op_to_spec(o) for o in frag], local, merge,
                         agg, pushdown)
+    if cost_ctx is not None and pushdown and plan.frag_spec:
+        plan.decisions = cost_ctx.place(plan)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -298,16 +324,32 @@ def apply_ops(ops: Sequence[Op], arr: np.ndarray,
     return ("rows", rows)
 
 
-def compile_fragment(frag_spec: List[Dict], kcfg: KernelCfg
+def compile_fragment(frag_spec: List[Dict], kcfg: KernelCfg,
+                     collect_stats: bool = False
                      ) -> Callable[[np.ndarray], Any]:
     """Build the storage-side executor function for a fragment spec —
-    this is what gets registered with FunctionShipper."""
+    this is what gets registered with FunctionShipper.
+
+    ``collect_stats=True`` piggybacks a partition-stats summary on the
+    result (``{cost.STATS_KEY: summary, "partial": ...}``): the store
+    already has the raw rows in hand, so summarizing them is nearly
+    free, and the StatsCatalog's shipper observer harvests the summary
+    to feed the next query's cost decisions."""
     ops = [op_from_spec(s) for s in frag_spec]
 
     def fragment(arr: np.ndarray):
         return apply_ops(ops, arr, kcfg)
 
-    return fragment
+    if not collect_stats:
+        return fragment
+
+    from repro.analytics.cost import STATS_KEY, summarize_rows
+
+    def fragment_with_stats(arr: np.ndarray):
+        return {STATS_KEY: summarize_rows(as_rows(arr)),
+                "partial": apply_ops(ops, arr, kcfg)}
+
+    return fragment_with_stats
 
 
 # ---------------------------------------------------------------------------

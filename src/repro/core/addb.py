@@ -81,6 +81,32 @@ class Addb:
             "ok": np.array([r.ok for r in recs], bool),
         }
 
+    # ---- analytics plan decision trace ----
+
+    def record_decision(self, query: str, oid: str, mode: str,
+                        est_bytes: int, est_s: float):
+        """Record one per-partition placement decision of the analytics
+        cost-based optimizer (op ``analytics_plan``): ``mode`` is
+        ship | fetch | cached, ``est_bytes`` the predicted bytes crossing
+        to the caller, ``est_s`` the predicted partition cost.  The
+        decision trace is how chosen-plan quality is audited after the
+        fact (bench_analytics compares it against the always-push and
+        always-fetch oracles)."""
+        self.record("analytics_plan", f"{query}:{oid}", mode,
+                    int(est_bytes), float(est_s))
+
+    def plan_trace(self, query: Optional[str] = None) -> List[Dict]:
+        """Decision-trace records as dicts (optionally for one query tag),
+        oldest first: {query, oid, mode, est_bytes, est_s}."""
+        out: List[Dict] = []
+        for r in self.records("analytics_plan"):
+            q, _, oid = r.entity.partition(":")
+            if query is not None and q != query:
+                continue
+            out.append({"query": q, "oid": oid, "mode": r.device,
+                        "est_bytes": r.nbytes, "est_s": r.latency_s})
+        return out
+
     # ---- aggregations (ARM-Forge-style performance report) ----
 
     def device_latency_percentile(self, pct: float = 0.99

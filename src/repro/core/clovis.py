@@ -151,6 +151,7 @@ class Clovis:
         self.addb = self.store.addb
         self._indices: Dict[str, ClovisIndex] = {}
         self.percipience = None   # set by enable_percipience
+        self._stats_catalog = None   # shared by analytics() engines
         self._lock = threading.RLock()
 
     # ---- access interface: objects ----
@@ -165,8 +166,8 @@ class Clovis:
         self.store.meta(oid).attrs["size"] = len(data)
         self.store.write(oid, data, txn=txn)
 
-    def get(self, oid: str) -> bytes:
-        data = self.store.read(oid)
+    def get(self, oid: str, _notify: bool = True) -> bytes:
+        data = self.store.read(oid, _notify=_notify)
         return data[: self.store.read_size(oid)]
 
     def delete(self, oid: str):
@@ -198,21 +199,22 @@ class Clovis:
                            "shape": list(arr.shape), "size": len(raw)})
         self.store.write(oid, raw, txn=txn)
 
-    def get_array(self, oid: str) -> np.ndarray:
+    def get_array(self, oid: str, _notify: bool = True) -> np.ndarray:
         meta = self.store.meta(oid)
-        raw = self.get(oid)
+        raw = self.get(oid, _notify=_notify)
         dtype = _dtype_from_name(meta.attrs["dtype"])
         return np.frombuffer(raw, dtype=dtype).reshape(meta.attrs["shape"])
 
-    def materialize(self, oid: str) -> np.ndarray:
+    def materialize(self, oid: str, _notify: bool = True) -> np.ndarray:
         """Object payload as a numpy array: typed (``get_array``) for
         ``kind == 'array'`` objects, raw uint8 otherwise — the single
         materialization rule shared by function shipping (storage-side)
         and the analytics fetch-all path (caller-side), so the two can
-        never diverge."""
+        never diverge.  ``_notify=False`` marks an internal read (stats
+        analysis): no read hooks, no heat/access bookkeeping."""
         if self.store.meta(oid).attrs.get("kind") == "array":
-            return self.get_array(oid)
-        return np.frombuffer(self.get(oid), dtype=np.uint8)
+            return self.get_array(oid, _notify=_notify)
+        return np.frombuffer(self.get(oid, _notify=_notify), dtype=np.uint8)
 
     # ---- index interface ----
 
@@ -247,8 +249,16 @@ class Clovis:
     def analytics(self, **kw) -> "AnalyticsEngine":
         """Entry point to the percipient analytics engine — declarative
         pushdown dataflow queries over containers and streams (see
-        repro.analytics and docs/analytics.md)."""
-        from repro.analytics import AnalyticsEngine
+        repro.analytics and docs/analytics.md).  All engines created
+        through this facade share one StatsCatalog, so selectivity
+        statistics harvested by one query benefit every later one
+        (pass ``stats=`` to override)."""
+        from repro.analytics import AnalyticsEngine, StatsCatalog
+        if "stats" not in kw:
+            with self._lock:
+                if self._stats_catalog is None:
+                    self._stats_catalog = StatsCatalog().attach(self.store)
+            kw["stats"] = self._stats_catalog
         return AnalyticsEngine(self, **kw)
 
 

@@ -37,6 +37,7 @@ class ShipResult:
     value: Any = None
     error: str = ""
     retries: int = 0
+    version: int = -1       # object version the shipped read saw (-1 n/a)
 
 
 @dataclass
@@ -57,6 +58,7 @@ class FunctionShipper:
         self.max_retries = max_retries
         self._registry: Dict[str, Callable[[np.ndarray], Any]] = {}
         self._partials: Dict[str, PartialAgg] = {}
+        self._observers: List[Callable[[ShipResult], None]] = []
         self._pool = cf.ThreadPoolExecutor(max_workers=max_workers,
                                            thread_name_prefix="sage-ship")
         self._lock = threading.Lock()
@@ -69,6 +71,30 @@ class FunctionShipper:
     def unregister(self, name: str):
         with self._lock:
             self._registry.pop(name, None)
+
+    def add_observer(self, fn: Callable[[ShipResult], None]):
+        """fn(ShipResult) after every shipped invocation settles — the
+        analytics StatsCatalog harvests piggybacked partition statistics
+        here, so every fragment that already touched the data store-side
+        refreshes selectivity stats for free."""
+        with self._lock:
+            if fn not in self._observers:
+                self._observers.append(fn)
+
+    def remove_observer(self, fn: Callable[[ShipResult], None]):
+        with self._lock:
+            if fn in self._observers:
+                self._observers.remove(fn)
+
+    def _notify(self, res: ShipResult) -> ShipResult:
+        with self._lock:
+            obs = list(self._observers)
+        for fn in obs:
+            try:
+                fn(res)
+            except Exception:
+                pass   # observers must not break the shipping path
+        return res
 
     def register_partial(self, name: str, partial: Callable[[np.ndarray], Any],
                          combine: Callable[[List[Any]], Any]):
@@ -136,6 +162,16 @@ class FunctionShipper:
         fn = self._registry[fn_name]
         return fn(self.clovis.materialize(oid))
 
+    def _version_of(self, oid: str) -> int:
+        """Object version captured *before* the read: versions are
+        monotonic, so data materialized afterwards is at least this
+        version — stats/caches stamped with it can never claim a newer
+        version than the bytes they describe."""
+        try:
+            return self.clovis.store.meta(oid).version
+        except KeyError:
+            return -1
+
     def ship(self, fn_name: str, oid: str) -> ShipResult:
         """Synchronous shipped invocation with retries."""
         if fn_name not in self._registry:
@@ -143,12 +179,15 @@ class FunctionShipper:
         err = ""
         for attempt in range(self.max_retries + 1):
             try:
+                ver = self._version_of(oid)
                 val = self._run_once(fn_name, oid)
-                return ShipResult(oid, fn_name, True, val, retries=attempt)
+                return self._notify(
+                    ShipResult(oid, fn_name, True, val, retries=attempt,
+                               version=ver))
             except Exception as e:     # resilient offload: catch & retry
                 err = f"{type(e).__name__}: {e}"
-        return ShipResult(oid, fn_name, False, error=err,
-                          retries=self.max_retries)
+        return self._notify(ShipResult(oid, fn_name, False, error=err,
+                                       retries=self.max_retries))
 
     def ship_async(self, fn_name: str, oid: str) -> "cf.Future[ShipResult]":
         return self._pool.submit(self.ship, fn_name, oid)
@@ -191,13 +230,15 @@ class FunctionShipper:
         err = ""
         for attempt in range(self.max_retries + 1):
             try:
-                return ShipResult(oid, fn_name, True,
-                                  fn(self.clovis.materialize(oid)),
-                                  retries=attempt)
+                ver = self._version_of(oid)
+                return self._notify(
+                    ShipResult(oid, fn_name, True,
+                               fn(self.clovis.materialize(oid)),
+                               retries=attempt, version=ver))
             except Exception as e:      # resilient offload: catch & retry
                 err = f"{type(e).__name__}: {e}"
-        return ShipResult(oid, fn_name, False, error=err,
-                          retries=self.max_retries)
+        return self._notify(ShipResult(oid, fn_name, False, error=err,
+                                       retries=self.max_retries))
 
     def ship_blocks(self, fn_name: str, oid: str) -> ShipResult:
         """Per-block shipped invocation: the executor streams the object

@@ -178,6 +178,41 @@ class HsmDaemon:
             self._thread.join(timeout=5)
 
 
+@dataclass(frozen=True)
+class TierParams:
+    """The HSM tier map entry for one tier: the device performance model
+    plus live capacity state.  This is the single latency/bandwidth
+    parameter source shared by RTHMS ``recommend_tier`` and the
+    analytics cost-based optimizer (pushdown-vs-fetch per partition)."""
+
+    tier: str
+    latency: float            # seconds per op
+    read_bw: float            # bytes/s
+    write_bw: float           # bytes/s
+    capacity: int             # bytes, across all devices
+    used: int                 # bytes, across all devices
+
+    def read_s(self, size_bytes: int) -> float:
+        """Modelled time to scan ``size_bytes`` off this tier."""
+        return self.latency + size_bytes / max(self.read_bw, 1.0)
+
+
+def tier_params(store: ObjectStore) -> Dict[str, TierParams]:
+    """The HSM tier map: per-tier latency/bandwidth/capacity parameters
+    derived from the live device pools."""
+    out: Dict[str, TierParams] = {}
+    for tier, pool in store.pools.items():
+        devs = pool.healthy or pool.devices
+        if not devs:
+            continue
+        m = devs[0].model
+        out[tier] = TierParams(
+            tier, m.latency, m.read_bw, m.write_bw,
+            capacity=sum(d.model.capacity for d in pool.devices),
+            used=sum(d.used_bytes for d in pool.devices))
+    return out
+
+
 def recommend_tier(store: ObjectStore, *, size_bytes: int,
                    read_fraction: float, random_access: bool,
                    exclude: Tuple[str, ...] = ()) -> str:
@@ -185,17 +220,15 @@ def recommend_tier(store: ObjectStore, *, size_bytes: int,
     best, best_t = None, float("inf")
     ops = 1000 if random_access else 1
     per_op = size_bytes / ops
-    for tier, pool in store.pools.items():
-        if tier in exclude or not pool.healthy:
+    params = tier_params(store)
+    for tier, p in params.items():
+        if tier in exclude or not store.pools[tier].healthy:
             continue
-        m = pool.healthy[0].model
-        used = sum(d.used_bytes for d in pool.devices)
-        cap = sum(d.model.capacity for d in pool.devices)
-        if used + size_bytes > cap:
+        if p.used + size_bytes > p.capacity:
             continue
-        t = ops * (m.latency +
-                   per_op * (read_fraction / m.read_bw +
-                             (1 - read_fraction) / m.write_bw))
+        t = ops * (p.latency +
+                   per_op * (read_fraction / p.read_bw +
+                             (1 - read_fraction) / p.write_bw))
         if t < best_t:
             best, best_t = tier, t
     return best or TIER_ORDER[-1]

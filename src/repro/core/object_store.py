@@ -72,6 +72,7 @@ class ObjectStore:
         self._containers: Dict[str, Dict[str, Any]] = {"default": {}}
         self._fdmi: List[Callable[[str, str, Dict], None]] = []
         self._read_hooks: List[Callable[[str, int], None]] = []
+        self._write_hooks: List[Callable[[str, int], None]] = []
         self._lock = threading.RLock()
         self._load_meta()
         self.recover()
@@ -103,6 +104,10 @@ class ObjectStore:
         """fn(event, oid, info) on create/write/commit/delete/migrate."""
         self._fdmi.append(fn)
 
+    def fdmi_unregister(self, fn: Callable[[str, str, Dict], None]):
+        if fn in self._fdmi:
+            self._fdmi.remove(fn)
+
     def _emit(self, event: str, oid: str, info: Optional[Dict] = None):
         for fn in list(self._fdmi):
             try:
@@ -122,6 +127,24 @@ class ObjectStore:
                 fn(oid, nbytes)
             except Exception:
                 pass   # observers must not break the read path
+
+    def register_write_hook(self, fn: Callable[[str, int], None]):
+        """fn(oid, nbytes) after every committed write/append — the
+        analytics StatsCatalog invalidates per-partition selectivity
+        statistics here (a new version means old stats are stale).
+        Migration does not fire the hook: it moves bytes, not content."""
+        self._write_hooks.append(fn)
+
+    def unregister_write_hook(self, fn: Callable[[str, int], None]):
+        if fn in self._write_hooks:
+            self._write_hooks.remove(fn)
+
+    def _notify_write(self, oid: str, nbytes: int):
+        for fn in list(self._write_hooks):
+            try:
+                fn(oid, nbytes)
+            except Exception:
+                pass   # observers must not break the write path
 
     # ------------------------------------------------------------------
     # placement
@@ -256,6 +279,7 @@ class ObjectStore:
                 self._persist_meta(meta)
                 self._gc_version(meta, old_version)
             self._emit("write", oid, {"blocks": nblocks, "version": version})
+            self._notify_write(oid, len(data))
 
         if txn is None:
             commit()
@@ -392,6 +416,7 @@ class ObjectStore:
             self._persist_meta(meta)
         self._emit("write", oid, {"blocks": nblocks, "version": version,
                                   "append": True})
+        self._notify_write(oid, len(data))
 
     def read(self, oid: str, start_block: int = 0,
              nblocks: Optional[int] = None, _notify: bool = True) -> bytes:

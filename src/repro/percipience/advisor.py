@@ -1,4 +1,6 @@
-"""Learned tier placement — predicted heat instead of raw access counts.
+"""Learned tier placement — predicted heat instead of raw access
+counts, SAGE's percipience applied to HSM (paper §3.2.3: usage-driven
+data movement steered by what the store learns about its workload).
 
 ``PercipientPolicy`` is a drop-in scorer for ``HsmDaemon`` (its pluggable
 ``decide`` hook): promote objects whose *predicted* heat — the
@@ -65,6 +67,17 @@ class PercipientPolicy:
         if now - self._heat_ts > self.refresh_s:
             self.refresh(now)
         return {oid: self._heat.get(oid, 0.0) for oid in oids}
+
+    def load_factor(self, oids, now: Optional[float] = None
+                    ) -> Dict[str, float]:
+        """Predicted storage-side contention per object, as saturating
+        heat in [0, 1): heat h maps to h / (1 + h).  The analytics cost
+        model uses this to discount in-storage compute for partitions
+        whose storage node is predicted busy serving demand reads —
+        percipience steering computation *away* from overloaded storage,
+        the flip side of shipping it there."""
+        return {oid: h / (1.0 + h)
+                for oid, h in self.heat_map(oids, now).items()}
 
     # ------------------------------------------------------------------
     # HsmDaemon scorer hook

@@ -1,4 +1,6 @@
-"""Batched heat scoring + Markov next-access prediction (percipience).
+"""Batched heat scoring + Markov next-access prediction — the
+*prediction* stage of SAGE's percipience loop (the paper's title claim:
+storage that anticipates access instead of only reacting to it).
 
 The heat of an object is an exponentially-decayed access count,
 

@@ -1,4 +1,6 @@
-"""Async prefetch engine — percipience acting ahead of demand.
+"""Async prefetch engine — percipience acting ahead of demand, the
+*action* stage of SAGE's loop (pre-staging predicted-next objects into
+fast tiers, the paper follow-up's explicit self-optimisation goal).
 
 On every demand read the prefetcher asks the Markov predictor for the
 likely next objects and promotes them toward the fast tier via

@@ -1,4 +1,5 @@
-"""Percipience feature extraction — the telemetry side of the loop.
+"""Percipience feature extraction — the *observation* stage of SAGE's
+loop, built on the ADDB telemetry the paper dedicates §3.2.2 to.
 
 The extractor taps the three observation surfaces the store already has:
 

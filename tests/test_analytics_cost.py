@@ -1,0 +1,340 @@
+"""Cost-based optimizer tests: StatsCatalog collection/invalidation,
+KMV distinct sketches, selectivity estimation, per-partition placement
+(ship / fetch / cached), cold-start safety, empty partitions, the
+forced-fetch case at selectivity ≈ 1, and the ADDB decision trace."""
+import numpy as np
+import pytest
+
+from repro.analytics import col
+from repro.analytics.cost import (CACHED, FETCH, SHIP, CostModel,
+                                  PartitionStats, StatsCatalog,
+                                  estimate_fragment, expr_selectivity,
+                                  summarize_rows, _kmv_distinct)
+from repro.core.hsm import tier_params
+
+
+@pytest.fixture()
+def engine(sage):
+    eng = sage.analytics(interpret=True)
+    yield eng
+    eng.close()
+
+
+def _skewed(sage, n_objects=4, rows=512, container="skew"):
+    """Half the partitions pass ``col(1) >= 50`` entirely (selectivity 1),
+    half pass nothing (selectivity 0)."""
+    rng = np.random.default_rng(3)
+    arrs = []
+    for i in range(n_objects):
+        a = np.empty((rows, 4), np.int32)
+        a[:, 0] = rng.integers(0, 7, rows)
+        a[:, 1] = (rng.integers(50, 100, rows) if i < n_objects // 2
+                   else rng.integers(0, 50, rows))
+        a[:, 2] = rng.integers(-40, 40, rows)
+        a[:, 3] = i
+        sage.put_array(f"{container}/{i:02d}", a, container=container)
+        arrs.append(a)
+    return np.vstack(arrs)
+
+
+# ---------------------------------------------------------------------------
+# sketches + summaries
+# ---------------------------------------------------------------------------
+
+def test_kmv_distinct_estimates(rng):
+    assert _kmv_distinct(np.zeros(0)) == 0.0
+    assert _kmv_distinct(np.full(100, 7)) == 1.0
+    assert _kmv_distinct(np.arange(40)) == 40.0          # exact below k
+    est = _kmv_distinct(rng.integers(0, 5000, 20_000))
+    true = 5000 * (1 - np.exp(-20_000 / 5000))           # ~4908 occupied
+    assert 0.5 * true < est < 2.0 * true                 # sketch-accurate
+    # float columns hash through their bit patterns
+    assert _kmv_distinct(rng.normal(size=500).astype(np.float32)) > 100
+
+
+def test_summarize_rows_and_empty():
+    a = np.array([[1, 10], [2, 20], [3, 30]], np.int32)
+    s = summarize_rows(a)
+    assert s["rows"] == 3 and s["ncols"] == 2 and s["nbytes"] == a.nbytes
+    assert s["cols"][0]["lo"] == 1 and s["cols"][0]["hi"] == 3
+    assert s["cols"][1]["distinct"] == 3.0
+    e = summarize_rows(np.zeros((0, 4), np.int32))
+    assert e["rows"] == 0 and e["cols"][0]["distinct"] == 0.0
+    # 1-D payloads normalise to a single column
+    assert summarize_rows(np.arange(5))["ncols"] == 1
+
+
+def test_selectivity_estimates():
+    st = PartitionStats.from_summary("o", 1, summarize_rows(
+        np.stack([np.arange(100), np.repeat(np.arange(10), 10)],
+                 axis=1).astype(np.int32)))
+    cm = list(range(st.ncols))
+    approx = lambda s, v: s == pytest.approx(v, abs=0.06)
+    assert approx(expr_selectivity((col(0) > 49).to_spec(), st, cm), 0.5)
+    assert approx(expr_selectivity((col(0) <= 24).to_spec(), st, cm), 0.25)
+    assert approx(expr_selectivity((50 > col(0)).to_spec(), st, cm), 0.5)
+    assert approx(expr_selectivity((col(1) == 3).to_spec(), st, cm), 0.1)
+    assert expr_selectivity((col(1) == 999).to_spec(), st, cm) == 0.0
+    both = ((col(0) > 49) & (col(1) == 3)).to_spec()
+    assert approx(expr_selectivity(both, st, cm), 0.05)
+    neg = (~(col(0) > 49)).to_spec()
+    assert approx(expr_selectivity(neg, st, cm), 0.5)
+    # col-vs-col compares are inestimable
+    assert expr_selectivity((col(0) > col(1)).to_spec(), st, cm) is None
+
+
+def test_estimate_fragment_tracks_projection():
+    rows = np.stack([np.arange(100), np.repeat(np.arange(4), 25)],
+                    axis=1).astype(np.int32)
+    st = PartitionStats.from_summary("o", 1, summarize_rows(rows))
+    # select(1) renumbers column 1 -> 0; the filter must still resolve
+    # to the original column's stats
+    frag = [{"op": "select", "cols": [1]},
+            {"op": "filter", "expr": (col(0) == 2).to_spec()}]
+    est = estimate_fragment(frag, st)
+    assert est.selectivity == pytest.approx(0.25, abs=0.05)
+    assert est.exact
+
+
+# ---------------------------------------------------------------------------
+# catalog: feeds + freshness
+# ---------------------------------------------------------------------------
+
+def test_catalog_analyze_and_write_invalidation(sage):
+    _skewed(sage, n_objects=2)
+    cat = StatsCatalog().attach(sage.store)
+    assert cat.analyze(sage, "skew") == 2
+    assert cat.fresh("skew/00") and cat.fresh("skew/01")
+    # a committed write invalidates through the ObjectStore write hook
+    sage.put_array("skew/00", np.ones((8, 4), np.int32), container="skew")
+    assert not cat.fresh("skew/00")
+    assert cat.fresh("skew/01")
+    sage.delete("skew/01")
+    assert not cat.fresh("skew/01")
+
+
+def test_catalog_survives_migration(sage):
+    from repro.core import layouts as lay
+    from repro.core.tiers import T3_DISK
+    _skewed(sage, n_objects=1)
+    cat = StatsCatalog().attach(sage.store)
+    cat.analyze(sage, "skew")
+    sage.migrate("skew/00", lay.Layout(lay.STRIPED, T3_DISK, 2))
+    # migration moves bytes, not content: stats stay fresh
+    assert cat.fresh("skew/00")
+
+
+def test_stats_piggyback_via_shipper(sage, engine):
+    """A cold costed run must leave the catalog warm: shipped fragments
+    piggyback summaries harvested by the FunctionShipper observer."""
+    allr = _skewed(sage)
+    assert len(engine.stats) == 0
+    res = engine.run(engine.scan("skew").filter(col(1) >= 50))
+    assert set(res.stats.decisions.values()) == {SHIP}   # cold start
+    for oid in sage.container("skew"):
+        assert engine.stats.fresh(oid), oid
+    got = np.asarray(res.value)
+    want = allr[allr[:, 1] >= 50]
+    assert sorted(map(tuple, got.tolist())) == sorted(map(tuple,
+                                                          want.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# placement decisions
+# ---------------------------------------------------------------------------
+
+def test_cold_start_falls_back_to_push(sage, engine):
+    """No stats at all -> every partition ships (never crashes)."""
+    _skewed(sage)
+    ds = engine.scan("skew").filter(col(1) >= 50).key_by(col(0)) \
+        .aggregate("sum", value=col(2))
+    plan_txt = engine.explain(ds)
+    assert "ship=4 fetch=0 cached=0" in plan_txt
+
+
+def test_high_selectivity_forces_fetch(sage, engine):
+    """Selectivity ≈ 1 makes pushdown pointless: the raw bytes cross
+    either way, so the costed plan fetches and computes caller-side."""
+    allr = _skewed(sage)
+    engine.stats.analyze(sage, "skew")
+    res = engine.run(engine.scan("skew").filter(col(1) >= 0))   # keeps all
+    assert set(res.stats.decisions.values()) == {FETCH}
+    got = np.asarray(res.value)
+    assert sorted(map(tuple, got.tolist())) == sorted(map(tuple,
+                                                          allr.tolist()))
+
+
+def test_skewed_selectivity_mixed_plan(sage, engine):
+    """The costed plan ships empty-result partitions and fetches
+    all-pass partitions — and never moves more bytes than always-push."""
+    allr = _skewed(sage)
+    engine.stats.analyze(sage, "skew")
+    q = lambda eng: eng.scan("skew").filter(col(1) >= 50)
+    res = engine.run(q(engine))
+    modes = res.stats.decisions
+    assert modes["skew/00"] == FETCH and modes["skew/01"] == FETCH
+    assert modes["skew/02"] == SHIP and modes["skew/03"] == SHIP
+
+    push = sage.analytics(interpret=True, cost_based=False)
+    rp = push.run(q(push))
+    assert res.stats.bytes_moved <= rp.stats.bytes_moved
+    want = allr[allr[:, 1] >= 50]
+    for got in (np.asarray(res.value), np.asarray(rp.value)):
+        assert sorted(map(tuple, got.tolist())) == \
+            sorted(map(tuple, want.tolist()))
+    push.close()
+
+
+def test_grouped_aggregate_still_ships_with_stats(sage, engine):
+    """Aggregates reduce to tiny partials, so even selectivity-1
+    partitions ship — the cost model sizes the output, not the input."""
+    _skewed(sage)
+    engine.stats.analyze(sage, "skew")
+    res = engine.run(engine.scan("skew").key_by(col(0))
+                     .aggregate("sum", value=col(2)))
+    assert set(res.stats.decisions.values()) == {SHIP}
+
+
+def test_empty_partition_is_harmless(sage, engine):
+    _skewed(sage, n_objects=2)
+    sage.put_array("skew/99", np.zeros((0, 4), np.int32), container="skew")
+    engine.stats.analyze(sage, "skew")
+    res = engine.run(engine.scan("skew").filter(col(1) >= 50)
+                     .aggregate("count"))
+    assert res.stats.partitions == 3
+    assert res.value == 512          # the one all-pass partition
+
+
+def test_cached_partials_reused_and_invalidated(sage, engine):
+    allr = _skewed(sage)
+    q = lambda: engine.scan("skew").filter(col(1) >= 50).key_by(col(0)) \
+        .aggregate("sum", value=col(2))
+    r1 = engine.run(q())
+    assert r1.stats.cache_hits == 0
+    r2 = engine.run(q())
+    assert set(r2.stats.decisions.values()) == {CACHED}
+    assert r2.stats.cache_hits == 4 and r2.stats.bytes_moved == 0
+    k1, v1 = r1.value
+    k2, v2 = r2.value
+    assert (k1 == k2).all() and (v1 == v2).all()
+    # rewriting one partition invalidates exactly its cache entry
+    rng = np.random.default_rng(9)
+    a = np.empty((64, 4), np.int32)
+    a[:, 0] = rng.integers(0, 7, 64)
+    a[:, 1] = 60
+    a[:, 2] = rng.integers(-40, 40, 64)
+    a[:, 3] = 0
+    sage.put_array("skew/00", a, container="skew")
+    r3 = engine.run(q())
+    assert r3.stats.decisions["skew/00"] != CACHED
+    assert sum(1 for m in r3.stats.decisions.values() if m == CACHED) == 3
+    m = np.vstack([a] + [allr[allr[:, 3] == i] for i in (1, 2, 3)])
+    m = m[m[:, 1] >= 50]
+    wk = np.unique(m[:, 0])
+    wv = np.array([m[m[:, 0] == k][:, 2].sum() for k in wk])
+    k3, v3 = r3.value
+    assert (k3 == wk).all() and (v3 == wv).all()
+
+
+def test_addb_decision_trace(sage, engine):
+    _skewed(sage)
+    engine.stats.analyze(sage, "skew")
+    res = engine.run(engine.scan("skew").filter(col(1) >= 50))
+    assert res.stats.query_tag
+    trace = sage.addb.plan_trace(res.stats.query_tag)
+    assert len(trace) == 4
+    assert {t["oid"] for t in trace} == set(sage.container("skew"))
+    assert {t["mode"] for t in trace} == {SHIP, FETCH}
+    for t in trace:
+        assert t["est_bytes"] >= 0 and t["est_s"] >= 0.0
+
+
+def test_cost_model_tier_sensitivity(sage):
+    """The same partition costs more to work with on a slower tier; the
+    decision inputs come straight from the HSM tier map."""
+    _skewed(sage, n_objects=1)
+    cat = StatsCatalog().attach(sage.store)
+    cat.analyze(sage, "skew")
+    st = cat.get("skew/00")
+    tiers = tier_params(sage.store)
+    cm = CostModel()
+    frag = [{"op": "filter", "expr": (col(1) >= 50).to_spec()}]
+    fast = cm.decide(frag, stats=st, size=8192, tier=tiers["t1_nvram"])
+    slow = cm.decide(frag, stats=st, size=8192, tier=tiers["t4_archive"])
+    assert slow.est_ship_s > fast.est_ship_s
+    assert slow.est_fetch_s > fast.est_fetch_s
+    # heat contention discounts in-storage compute
+    hot = cm.decide(frag, stats=st, size=8192, tier=tiers["t1_nvram"],
+                    load=0.9)
+    assert hot.est_ship_s > fast.est_ship_s
+    assert hot.est_fetch_s == pytest.approx(fast.est_fetch_s)
+
+
+def test_cache_invalidated_by_recreate(sage, engine):
+    """delete + recreate resets the object version, so the version key
+    alone would serve the deleted object's partial; the FDMI delete
+    hook must purge it."""
+    _skewed(sage, n_objects=1)
+    q = lambda: engine.scan("skew").aggregate("count")
+    assert engine.run(q()).value == 512
+    assert engine.run(q()).stats.cache_hits == 1
+    sage.delete("skew/00")
+    sage.put_array("skew/00", np.ones((7, 4), np.int32), container="skew")
+    res = engine.run(q())
+    assert res.stats.cache_hits == 0
+    assert res.value == 7
+
+
+def test_cache_invalidated_by_append(sage, engine):
+    """append changes content without a version bump; the write hook
+    must purge the cached partial."""
+    sage.create("raw/0", block_size=1 << 16, container="raw")
+    sage.put("raw/0", np.arange(16, dtype=np.uint8).tobytes())
+    q = lambda: engine.scan("raw").aggregate("count")
+    assert engine.run(q()).value == 16
+    assert engine.run(q()).stats.cache_hits == 1
+    sage.store.append("raw/0", np.arange(8, dtype=np.uint8).tobytes())
+    res = engine.run(q())
+    assert res.stats.cache_hits == 0
+    # append lands whole blocks; count covers the appended block too
+    assert res.value > 16
+
+
+def test_query_tags_unique_across_engines(sage):
+    """Two engines sharing one ADDB must not interleave their decision
+    traces under the same query tag."""
+    _skewed(sage, n_objects=2)
+    e1 = sage.analytics(interpret=True)
+    e2 = sage.analytics(interpret=True)
+    r1 = e1.run(e1.scan("skew").filter(col(1) >= 50))
+    r2 = e2.run(e2.scan("skew").filter(col(1) >= 50))
+    assert r1.stats.query_tag != r2.stats.query_tag
+    assert len(sage.addb.plan_trace(r1.stats.query_tag)) == 2
+    assert len(sage.addb.plan_trace(r2.stats.query_tag)) == 2
+    e1.close(), e2.close()
+
+
+def test_numpy_scalar_literals_are_estimable():
+    rows = np.stack([np.arange(100), np.arange(100)], 1).astype(np.int32)
+    st = PartitionStats.from_summary("o", 1, summarize_rows(rows))
+    cm = list(range(st.ncols))
+    spec = (col(0) >= np.int64(50)).to_spec()
+    assert spec["r"]["v"] == 50 and isinstance(spec["r"]["v"], int)
+    s = expr_selectivity(spec, st, cm)
+    assert s == pytest.approx(0.5, abs=0.06)
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness regression
+# ---------------------------------------------------------------------------
+
+def test_bench_run_only_rejects_unknown_suite(monkeypatch, capsys):
+    """--only with an unknown key must error listing the known
+    benchmarks, not silently run nothing."""
+    import benchmarks.run as bench_run
+    monkeypatch.setattr("sys.argv", ["run.py", "--only", "nope"])
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main()
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "nope" in err and "analytics" in err and "percipience" in err

@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""Docs link checker — verify every relative markdown link in README.md
+and docs/*.md resolves to a real file (CI's docs job runs this, plus
+``python -m compileall src`` for syntax rot in non-imported modules).
+
+External links (http/https/mailto) and pure in-page anchors are
+skipped; ``file.md#section`` links are checked for the file part only.
+Exit status 0 when everything resolves, 1 otherwise (broken links are
+listed one per line).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def broken_links(md: Path) -> list:
+    out = []
+    for m in LINK.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:                      # pure in-page anchor
+            continue
+        if not (md.parent / path).exists():
+            out.append(target)
+    return out
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    failures = 0
+    checked = 0
+    for md in files:
+        if not md.exists():
+            print(f"MISSING FILE: {md.relative_to(ROOT)}")
+            failures += 1
+            continue
+        checked += 1
+        for target in broken_links(md):
+            print(f"{md.relative_to(ROOT)}: broken link -> {target}")
+            failures += 1
+    if failures:
+        print(f"{failures} broken link(s) across {checked} file(s)")
+        return 1
+    print(f"checked {checked} markdown file(s): all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
