@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-percipience bench-analytics docs-check
+.PHONY: test bench bench-percipience bench-analytics bench-streaming docs-check
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -21,3 +21,6 @@ bench-percipience:
 
 bench-analytics:
 	$(PYTHON) -m benchmarks.run --only analytics
+
+bench-streaming:
+	$(PYTHON) -m benchmarks.run --only streaming

@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
                                              streams|clovis|percipience|
-                                             analytics] [--quick]
+                                             analytics|streaming] [--quick]
 """
 from __future__ import annotations
 
@@ -51,6 +51,10 @@ def main() -> None:
             n_objects=8 if args.quick else 16,
             rows=4096 if args.quick else 8192,
             stream_elements=500 if args.quick else 2000),
+        # continuous queries: incremental watermarked windows vs
+        # drain-then-batch over the same live stream
+        "streaming": lambda: bench_stream_windows.run_streaming(
+            n_elements=800 if args.quick else 2000),
     }
     if args.only is not None and args.only not in suites:
         ap.error(f"unknown benchmark {args.only!r} for --only; known "

@@ -18,6 +18,12 @@ Architecture:
 Aggregation hot paths run on Pallas kernels (kernels.py) with
 interpret-mode CPU fallback and pure-numpy references.
 
+Live streams additionally run as *continuous queries*
+(streaming.py): ``from_stream(StreamContext)`` +
+``run_continuous(ds, EventWindow(...))`` gives incremental watermarked
+event-time windows emitting while the stream is live — see
+docs/streaming.md.
+
 Entry point: ``Clovis.analytics()`` or ``AnalyticsEngine(clovis)``.
 """
 from repro.analytics.cost import (CostModel, Decision,  # noqa: F401
@@ -31,3 +37,6 @@ from repro.analytics.exprs import Expr, col, lit  # noqa: F401
 from repro.analytics.kernels import (histogram, histogram_ref,  # noqa: F401
                                      segment_reduce, segment_reduce_ref,
                                      window_reduce, window_reduce_ref)
+from repro.analytics.streaming import (ContinuousQuery,  # noqa: F401
+                                       EventWindow, LateElement,
+                                       WatermarkTracker, WindowResult)

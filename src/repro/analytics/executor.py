@@ -45,9 +45,11 @@ from repro.analytics.cost import (CACHED, FETCH, SHIP, STATS_KEY,
                                   ComputeModel, CostContext, CostModel,
                                   NetworkModel, StatsCatalog, frag_cache_key)
 from repro.analytics.dataset import (ContainerSource, Dataset, JoinSource,
-                                     StreamSource)
+                                     LiveStreamSource, StreamSource)
 from repro.analytics.plan import (KernelCfg, PhysicalPlan, apply_ops,
-                                  compile_fragment, merge_partials, optimize)
+                                  compile_fragment, merge_partials, optimize,
+                                  optimize_streaming)
+from repro.analytics.streaming import ContinuousQuery, EventWindow
 from repro.core import layouts as lay
 from repro.core.function_shipping import FunctionShipper
 from repro.core.hsm import recommend_tier
@@ -151,8 +153,13 @@ class AnalyticsEngine:
         return Dataset(self, ContainerSource(container))
 
     def from_stream(self, tap) -> Dataset:
-        """Dataset over a stream tap (see core.streams.StreamTap), one
-        partition per stream id with rows in sequence order."""
+        """Dataset over a stream source.  A StreamTap (or anything with
+        ``partitions()``) batches the drained rows, one partition per
+        stream id in sequence order.  A live StreamContext (anything
+        with ``subscribe``/``push``) makes the chain a *continuous
+        query*: execute it with ``run_continuous``, not ``run``."""
+        if hasattr(tap, "subscribe") and hasattr(tap, "push"):
+            return Dataset(self, LiveStreamSource(tap))
         return Dataset(self, StreamSource(tap))
 
     def explain(self, ds: Dataset) -> str:
@@ -161,6 +168,9 @@ class AnalyticsEngine:
             head = f"scan({src.container})"
             oids = self._schedule(self.clovis.container(src.container))
             plan = self._make_plan(ds, oids)
+        elif isinstance(src, LiveStreamSource):
+            head = "from_stream(live)"
+            plan = optimize_streaming(ds.ops)
         elif isinstance(src, StreamSource):
             head = "from_stream"
             plan = optimize(ds.ops, pushdown=False)
@@ -263,6 +273,12 @@ class AnalyticsEngine:
     def run(self, ds: Dataset) -> QueryResult:
         t0 = time.perf_counter()
         stats = QueryStats(pushdown=self._can_push(ds))
+        if isinstance(ds.source, LiveStreamSource):
+            raise ValueError(
+                "dataset reads a live StreamContext — an unbounded flow "
+                "has no batch result; execute it with run_continuous() "
+                "(incremental watermarked windows), or drain through a "
+                "StreamTap for a batch query")
         if isinstance(ds.source, JoinSource):
             value = self._run_join(ds, stats)
         elif isinstance(ds.source, StreamSource):
@@ -279,6 +295,32 @@ class AnalyticsEngine:
             value = merge_partials(plan, partials, self.kcfg)
         stats.wall_s = time.perf_counter() - t0
         return QueryResult(value, stats)
+
+    def run_continuous(self, ds: Dataset, window: EventWindow,
+                       **kw) -> ContinuousQuery:
+        """Execute a live-stream dataset as a continuous query:
+        incremental watermarked event-time windows emitting results
+        while the stream is still live (docs/streaming.md).
+
+        ``window`` is the EventWindow spec (size / slide / allowed
+        lateness); remaining keywords pass through to ContinuousQuery
+        (``on_result`` callback, ``max_results`` bounded queue size,
+        ``delta_rows`` incremental batch size, ``idle_timeout_s``).
+        Closed-window partials combine through the FunctionShipper
+        partial-aggregate registry (scalars) and ``merge_partials``
+        (grouped) — the exact merge code batch queries use, so the two
+        modes agree by construction."""
+        if not isinstance(ds.source, LiveStreamSource):
+            raise ValueError(
+                "run_continuous needs a live stream source — build the "
+                "dataset with from_stream(StreamContext)")
+        splan = optimize_streaming(ds.ops)
+        with self._lock:
+            self._qid += 1
+            tag = f"{self._etag}/cq{self._qid}"
+        return ContinuousQuery(ds.source.ctx, splan, window,
+                               shipper=self.shipper, kcfg=self.kcfg,
+                               addb=self.clovis.addb, tag=tag, **kw)
 
     # -- partition execution -------------------------------------------
 

@@ -107,6 +107,39 @@ class Addb:
                         "est_bytes": r.nbytes, "est_s": r.latency_s})
         return out
 
+    # ---- continuous-query window trace ----
+
+    def record_window(self, query: str, stream_id: str, window_start: float,
+                      rows: int, latency_s: float):
+        """Record one emitted window of a continuous query (op
+        ``stream_window``): ``rows`` is how many elements the window
+        aggregated and ``latency_s`` the emit latency — emit wall time
+        minus the wall time the merged watermark crossed the window's
+        close threshold.  Percipience reads this trace the same way it
+        reads I/O latencies: consistently slow window emits mean the
+        incremental operator (or its delta kernels) cannot keep up with
+        the stream and lateness budgets need retuning.  (Late elements
+        are per query, not per emitted window — the continuous query's
+        late side channel accounts them.)"""
+        self.record("stream_window", f"{query}:{stream_id}:{window_start!r}",
+                    "emit", int(rows), float(latency_s))
+
+    def window_trace(self, query: Optional[str] = None) -> List[Dict]:
+        """Emitted-window records as dicts (optionally for one query
+        tag), oldest first: {query, stream_id, window_start, rows,
+        emit_latency_s}."""
+        out: List[Dict] = []
+        for r in self.records("stream_window"):
+            q, _, rest = r.entity.partition(":")
+            if query is not None and q != query:
+                continue
+            sid, _, start = rest.rpartition(":")
+            out.append({"query": q, "stream_id": sid,
+                        "window_start": float(start),
+                        "rows": r.nbytes,
+                        "emit_latency_s": r.latency_s})
+        return out
+
     # ---- aggregations (ARM-Forge-style performance report) ----
 
     def device_latency_percentile(self, pct: float = 0.99

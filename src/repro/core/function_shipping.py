@@ -104,6 +104,17 @@ class FunctionShipper:
         with self._lock:
             self._partials[name] = PartialAgg(partial, combine)
 
+    def partial_agg(self, name: str) -> PartialAgg:
+        """Look up a registered partial aggregate.  Batch pushdown
+        (``ship_partial``) and the streaming continuous-query operator
+        (analytics/streaming.py) resolve aggregates through this one
+        registry, so a window's partial/combine semantics cannot drift
+        from the batch engine's."""
+        with self._lock:
+            if name not in self._partials:
+                raise KeyError(f"unknown partial aggregate {name!r}")
+            return self._partials[name]
+
     def _register_builtins(self):
         import jax
         import jax.numpy as jnp
@@ -213,9 +224,7 @@ class FunctionShipper:
         partial failed (after retries) are excluded from the combine and
         reported in their ShipResult.
         """
-        if agg_name not in self._partials:
-            raise KeyError(f"unknown partial aggregate {agg_name!r}")
-        agg = self._partials[agg_name]
+        agg = self.partial_agg(agg_name)
         oids = self.clovis.container(container)
         futs = [self._pool.submit(self._ship_with, agg.partial, agg_name, oid)
                 for oid in oids]

@@ -30,7 +30,12 @@ from repro.core.tiers import TierDevice
 
 
 class BaseWindow:
-    """PUT/GET/ACCUMULATE + SYNC surface shared by both backends."""
+    """The paper's one-sided window surface (§4.1, "MPI storage
+    windows"): PUT/GET/ACCUMULATE inside an epoch, made durable at
+    ``sync()``.  Both backends expose exactly this API — code written
+    against a memory window runs unchanged on a storage tier, which is
+    the paper's central PGAS-I/O claim (its STREAM/DHT/HACC-IO
+    benchmarks exercise the same surface on both)."""
 
     array: np.ndarray
 
@@ -64,6 +69,10 @@ class BaseWindow:
 
 
 class MemoryWindow(BaseWindow):
+    """The paper's plain "MPI window" (§4.1): a DRAM ndarray behind the
+    window surface — the baseline the storage-backed variant is measured
+    against (paper Fig. 3's memory bars)."""
+
     def __init__(self, shape: Sequence[int], dtype="float32"):
         self.array = np.zeros(tuple(shape), dtype=dtype)
 
@@ -72,7 +81,11 @@ class MemoryWindow(BaseWindow):
 
 
 class StorageWindow(BaseWindow):
-    """mmap-backed window on a tier device directory."""
+    """The paper's "MPI storage window" (§4.1): the same load/store
+    surface mapped over a file on a tier device — np.memmap stands in
+    for the mmap'ed storage target, the OS page cache is the paper's
+    transparent caching layer, and ``sync()`` is the MPI_Win_sync →
+    msync durability point that ends an epoch."""
 
     def __init__(self, path: Union[str, Path], shape: Sequence[int],
                  dtype="float32", device: Optional[TierDevice] = None):
@@ -102,11 +115,17 @@ class StorageWindow(BaseWindow):
 
 
 class WindowAllocator:
-    """MPI_Win_allocate analogue: choose memory or a storage tier.
+    """MPI_Win_allocate analogue (§4.1): the allocation call where the
+    paper's applications choose memory vs a storage tier — the *only*
+    line that changes when moving a code from DRAM to percipient
+    storage.
 
     ``alloc(..., tier=None)`` -> MemoryWindow; ``tier='t1_nvram'`` etc. ->
     StorageWindow on the first healthy device of that tier (round-robin
-    over devices for striped-ish bandwidth aggregation).
+    over devices for striped-ish bandwidth aggregation).  ``ingest``
+    seals a window into the object store (durable, layout-protected)
+    and ``restore`` materialises it back — the checkpoint/restart path
+    of the paper's HACC-IO scenario.
     """
 
     def __init__(self, clovis: Clovis):

@@ -8,13 +8,17 @@ producer returns immediately after an enqueue — step time is decoupled
 from I/O exactly as in Fig. 7.
 
 Properties:
-  * bounded queues give backpressure (block or drop-oldest policy);
+  * bounded queues give backpressure (block, drop-newest, or drop-oldest
+    policy);
   * consumers are work-stealing across producer queues (straggler
     mitigation);
   * ``flush(deadline)`` drains synchronously — the preemption path
     (SIGTERM -> flush -> exit) uses it;
   * per-element sequence numbers + consumer-side ordering give in-order
-    appends per stream id.
+    appends per stream id;
+  * ``subscribe`` lets additional consumers (the continuous-query
+    operator in ``analytics/streaming.py``) observe every consumed
+    element in place — no second copy of the stream.
 """
 from __future__ import annotations
 
@@ -29,17 +33,50 @@ StreamFn = Callable[["StreamElement"], None]
 
 @dataclass(order=True)
 class StreamElement:
+    """One record of the MPIStream flow (paper §4.2): what a producer
+    rank hands to the I/O offload path per step.
+
+    ``seq`` is the per-producer sequence number (consumer-side ordering
+    key — the paper's in-order append guarantee per stream).  ``ts`` is
+    *processing time* (when the element entered the stream runtime);
+    ``event_ts`` is optional *event time* (when the modelled phenomenon
+    happened — instrument clock, simulation step time).  Watermarked
+    continuous queries (analytics/streaming.py, Dataflow-model
+    semantics) window by ``event_ts`` and fall back to arrival time when
+    the producer did not stamp one.  ``producer`` identifies the source
+    rank so per-producer low-watermarks can be merged."""
     seq: int
     stream_id: str = field(compare=False)
     payload: Any = field(compare=False)
     ts: float = field(default_factory=time.time, compare=False)
+    event_ts: Optional[float] = field(default=None, compare=False)
+    producer: int = field(default=-1, compare=False)
+
+    @property
+    def event_time(self) -> float:
+        """Event time, falling back to arrival (processing) time."""
+        return self.ts if self.event_ts is None else self.event_ts
 
 
 class StreamContext:
+    """The MPIStream runtime (paper §4.2, Fig. 7): producer ranks emit
+    into bounded per-producer queues and return immediately; a small
+    consumer pool (paper's 1:15 consumer:producer ratio) drains them and
+    applies the attached computation, decoupling step time from I/O.
+
+    ``drop_policy``: ``"block"`` (backpressure, the default),
+    ``"drop"`` (reject the *new* element when the queue is full), or
+    ``"drop_oldest"`` (evict the oldest queued element to admit the new
+    one — live telemetry wants the freshest data).  Dropped elements are
+    counted in ``stats["dropped"]`` either way."""
+
     def __init__(self, *, n_producers: int, consumer_ratio: int = 15,
                  queue_depth: int = 256, attach: Optional[StreamFn] = None,
                  drop_policy: str = "block"):
         """attach: the computation applied to every consumed element."""
+        if drop_policy not in ("block", "drop", "drop_oldest"):
+            raise ValueError("drop_policy must be block | drop | "
+                             "drop_oldest")
         self.n_producers = n_producers
         self.n_consumers = max(1, -(-n_producers // consumer_ratio))
         self.drop_policy = drop_policy
@@ -51,7 +88,9 @@ class StreamContext:
         self._consumed = 0
         self._dropped = 0
         self._produced = 0
+        self._attach_errors = 0
         self._lock = threading.Lock()
+        self._subscribers: List[StreamFn] = []
         self._threads: List[threading.Thread] = []
         for c in range(self.n_consumers):
             t = threading.Thread(target=self._consumer_loop, args=(c,),
@@ -61,19 +100,50 @@ class StreamContext:
 
     # ------------------------------------------------------------------
 
-    def push(self, producer: int, stream_id: str, payload: Any) -> bool:
-        """Producer-side emit; returns False if dropped."""
+    def push(self, producer: int, stream_id: str, payload: Any,
+             *, event_ts: Optional[float] = None) -> bool:
+        """Producer-side emit; returns False if the element was dropped
+        (``drop`` policy).  ``event_ts`` stamps event time for
+        watermarked continuous queries; producers should stamp
+        non-decreasing event times (out-of-order stragglers are absorbed
+        by the query's allowed lateness)."""
         q = self._queues[producer]
-        el = StreamElement(self._seq[producer], stream_id, payload)
+        el = StreamElement(self._seq[producer], stream_id, payload,
+                           event_ts=event_ts, producer=producer)
         self._seq[producer] += 1
         with self._lock:
             self._produced += 1
-        if self.drop_policy == "drop" and q.full():
-            with self._lock:
-                self._dropped += 1
-            return False
+        if q.full():
+            if self.drop_policy == "drop":
+                with self._lock:
+                    self._dropped += 1
+                return False
+            if self.drop_policy == "drop_oldest":
+                try:
+                    q.get_nowait()
+                    q.task_done()      # keep unfinished_tasks accounting
+                    with self._lock:
+                        self._dropped += 1
+                except queue.Empty:
+                    pass               # a consumer drained it first
         q.put(el)          # blocks on full queue (backpressure)
         return True
+
+    def subscribe(self, fn: StreamFn) -> Callable[[], None]:
+        """Register a consumer-side observer: ``fn(el)`` runs for every
+        consumed element, after the attached computation, on the
+        consumer thread and on the *same* element object (no copy).
+        Observer exceptions are counted (``stats["attach_errors"]``)
+        and never break the drain.  Returns an unsubscribe callable."""
+        with self._lock:
+            self._subscribers.append(fn)
+
+        def unsubscribe():
+            with self._lock:
+                if fn in self._subscribers:
+                    self._subscribers.remove(fn)
+
+        return unsubscribe
 
     def _consumer_loop(self, cid: int):
         """Work-stealing drain over the producer queues."""
@@ -88,7 +158,22 @@ class StreamContext:
                 except queue.Empty:
                     continue
                 try:
-                    self._attach(el)
+                    try:
+                        self._attach(el)
+                    except Exception:
+                        # resilient drain: a failing attached computation
+                        # must not kill the consumer thread or starve
+                        # subscribers of the element
+                        with self._lock:
+                            self._attach_errors += 1
+                    with self._lock:
+                        subs = list(self._subscribers)
+                    for fn in subs:
+                        try:
+                            fn(el)
+                        except Exception:
+                            with self._lock:
+                                self._attach_errors += 1
                 finally:
                     with self._lock:
                         self._consumed += 1
@@ -129,24 +214,42 @@ class StreamContext:
         with self._lock:
             return {"produced": self._produced, "consumed": self._consumed,
                     "dropped": self._dropped, "pending": self._pending(),
+                    "attach_errors": self._attach_errors,
                     "consumers": self.n_consumers}
 
 
 def tee(*fns: StreamFn) -> StreamFn:
     """Fan one consumed element out to several attached computations
-    (e.g. persist via clovis_appender AND feed a StreamTap)."""
+    (e.g. persist via clovis_appender AND feed a StreamTap).
+
+    Branches are isolated: a raising branch never starves the others of
+    the element.  The first exception is re-raised after every branch
+    ran, so StreamContext still counts it in ``stats["attach_errors"]``
+    (failures stay visible instead of vanishing)."""
 
     def attach(el: StreamElement):
+        first: Optional[BaseException] = None
         for fn in fns:
-            fn(el)
+            try:
+                fn(el)
+            except Exception as e:   # isolate: remaining branches still run
+                if first is None:
+                    first = e
+        if first is not None:
+            raise first
 
     return attach
 
 
 class StreamTap:
-    """Stream → dataset bridge: an attached computation that folds
-    consumed elements into per-stream row buffers, which the analytics
-    engine scans as in-memory partitions (``Dataset.from_stream``).
+    """Stream → dataset bridge — the *drain-then-batch* half of SAGE's
+    "process data as it streams in" claim (paper §1, §4.2): an attached
+    computation that folds consumed elements into per-stream row
+    buffers, which the analytics engine scans as in-memory partitions
+    (``Dataset.from_stream``).  The incremental alternative — windowed
+    results emitted while the stream is still live — is the
+    continuous-query operator (``analytics/streaming.py``), which
+    subscribes to the context instead of buffering a dataset.
 
     Rows are kept in sequence order regardless of which consumer drained
     them (consumers are work-stealing, so arrival order is not seq

@@ -1,0 +1,368 @@
+"""Continuous queries: watermark tracking, event-time windows,
+incremental partial aggregates, lateness routing, and the streaming
+execution mode of the analytics engine (docs/streaming.md)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.analytics import EventWindow, WatermarkTracker, col
+from repro.analytics.plan import optimize_streaming
+from repro.core import StreamContext, StreamTap
+
+
+@pytest.fixture()
+def eng(sage):
+    # numpy-reference kernels: streaming semantics, not kernel dispatch,
+    # are under test (kernel interop is covered separately below)
+    e = sage.analytics(use_kernels=False)
+    yield e
+    e.close()
+
+
+def _push_all(ctx, per_stream, dt=0.1):
+    """per_stream: {producer: iterable of (payload, event_step)}."""
+    for p, items in per_stream.items():
+        for payload, step in items:
+            ctx.push(p, f"s{p}", np.asarray(payload), event_ts=step * dt)
+
+
+# ---------------------------------------------------------------------------
+# event-time windows + watermarks (pure units)
+# ---------------------------------------------------------------------------
+
+def test_event_window_tumbling_assignment():
+    w = EventWindow(size_s=1.0)
+    assert w.keys_for(0.0) == [0]
+    assert w.keys_for(0.99) == [0]
+    assert w.keys_for(1.0) == [1]          # half-open [start, end)
+    assert w.keys_for(-0.5) == [-1]
+    assert w.start(2) == 2.0 and w.end(2) == 3.0
+
+
+def test_event_window_sliding_assignment():
+    w = EventWindow(size_s=2.0, slide_s=1.0)
+    assert w.keys_for(0.5) == [-1, 0]      # [-1,1) and [0,2)
+    assert w.keys_for(1.0) == [0, 1]       # boundary leaves [-1,1)
+    assert w.end(0) == 2.0
+
+
+def test_event_window_validation():
+    with pytest.raises(ValueError):
+        EventWindow(size_s=0)
+    with pytest.raises(ValueError):
+        EventWindow(size_s=1, slide_s=0)
+    with pytest.raises(ValueError):
+        EventWindow(size_s=1, allowed_lateness_s=-1)
+
+
+def test_watermark_is_min_over_producers():
+    wm = WatermarkTracker(3)
+    assert wm.watermark() == float("-inf")     # nothing observed yet
+    wm.observe(0, 5.0)
+    wm.observe(2, 9.0)
+    assert wm.watermark() == float("-inf")     # producer 1 still silent
+    wm.observe(1, 3.0)
+    assert wm.watermark() == 3.0
+    wm.observe(1, 2.0)                         # stale: monotonic
+    assert wm.watermark() == 3.0
+    wm.seal(1)                                 # finished producers leave
+    assert wm.watermark() == 5.0
+    wm.seal()
+    assert wm.watermark() == float("inf")
+
+
+def test_watermark_idle_timeout_excludes_silent_producer():
+    wm = WatermarkTracker(2)
+    wm.observe(0, 7.0)
+    assert wm.watermark() == float("-inf")     # producer 1 holds it back
+    time.sleep(0.05)
+    assert wm.watermark(idle_timeout_s=0.01) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# streaming plan validation
+# ---------------------------------------------------------------------------
+
+def test_streaming_plan_requires_terminal_aggregate(eng, sage):
+    ctx = StreamContext(n_producers=1)
+    try:
+        ds = eng.from_stream(ctx).filter(col(0) > 0)
+        with pytest.raises(ValueError, match="terminal aggregate"):
+            optimize_streaming(ds.ops)
+        with pytest.raises(ValueError, match="row"):
+            optimize_streaming(
+                eng.from_stream(ctx).window(8).aggregate("sum").ops)
+        with pytest.raises(ValueError, match="histogram"):
+            optimize_streaming(
+                eng.from_stream(ctx)
+                   .aggregate("histogram", vrange=(0, 1)).ops)
+    finally:
+        ctx.close()
+
+
+def test_run_on_live_source_raises(eng):
+    ctx = StreamContext(n_producers=1)
+    try:
+        ds = eng.from_stream(ctx).aggregate("sum")
+        with pytest.raises(ValueError, match="run_continuous"):
+            eng.run(ds)
+        with pytest.raises(ValueError, match="run_continuous"):
+            ds.collect()
+    finally:
+        ctx.close()
+
+
+def test_run_continuous_requires_live_source(eng):
+    tap = StreamTap()
+    with pytest.raises(ValueError, match="live stream"):
+        eng.run_continuous(eng.from_stream(tap).aggregate("sum"),
+                           EventWindow(1.0))
+
+
+def test_explain_live_plan(eng):
+    ctx = StreamContext(n_producers=1)
+    try:
+        txt = (eng.from_stream(ctx).filter(col(0) > 0)
+                  .key_by(col(0)).aggregate("mean", value=col(1)).explain())
+        assert "from_stream(live)" in txt
+        assert "[watermark-close] group(mean)" in txt
+    finally:
+        ctx.close()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end continuous execution
+# ---------------------------------------------------------------------------
+
+def test_scalar_windows_match_reference(eng):
+    ctx = StreamContext(n_producers=2)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0), delta_rows=8)
+    # 3 full windows of 10 elements each, per producer
+    _push_all(ctx, {p: [([i], i) for i in range(30)] for p in range(2)})
+    assert ctx.close()
+    results = cq.close()
+    assert len(results) == 6                   # 3 windows x 2 streams
+    want = {k: sum(range(k * 10, k * 10 + 10)) for k in range(3)}
+    for r in results:
+        assert int(r.value) == want[int(r.start)]
+        assert r.rows == 10
+    st = cq.stats
+    assert st["open_windows"] == 0 and st["buffered_rows"] == 0
+
+
+def test_grouped_windows_match_batch_engine(sage):
+    """Same elements through the live operator and the drained batch
+    path must agree exactly (shared merge code, integer aggregates)."""
+    eng = sage.analytics()                     # kernel path on purpose
+    tap = StreamTap()
+    ctx = StreamContext(n_producers=1, attach=tap)
+    ds = (eng.from_stream(ctx).key_by(col(0))
+             .aggregate("sum", value=col(1)))
+    cq = eng.run_continuous(ds, EventWindow(1.0), delta_rows=5)
+    rng = np.random.default_rng(0)
+    rows = [(int(rng.integers(0, 4)), int(rng.integers(0, 100)))
+            for _ in range(40)]                # 2 windows of 20
+    for i, (k, v) in enumerate(rows):
+        ctx.push(0, "g", np.array([k, v], np.int64), event_ts=i * 0.05)
+    assert ctx.close()
+    results = {int(r.start): r.value for r in cq.close()}
+    assert set(results) == {0, 1}
+    for w, lohi in ((0, (0, 20)), (1, (20, 40))):
+        sub = rows[lohi[0]:lohi[1]]
+        want = {}
+        for k, v in sub:
+            want[k] = want.get(k, 0) + v
+        keys, vals = results[w]
+        assert {int(k): int(v) for k, v in zip(keys, vals)} == want
+    eng.close()
+
+
+def test_filter_and_select_run_on_deltas(eng):
+    ctx = StreamContext(n_producers=1)
+    ds = (eng.from_stream(ctx).filter(col(1) % 2 == 0).select(1)
+             .aggregate("count"))
+    cq = eng.run_continuous(ds, EventWindow(1.0), delta_rows=4)
+    _push_all(ctx, {0: [([i, i], i) for i in range(20)]})  # one window: 0-9
+    assert ctx.close()
+    results = cq.close()
+    by_start = {int(r.start): r for r in results}
+    assert int(by_start[0].value) == 5         # evens among 0..9
+    assert by_start[0].rows == 5               # post-filter accounting
+
+
+def test_results_emitted_while_stream_is_live(eng):
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0), delta_rows=4)
+    _push_all(ctx, {0: [([i], i) for i in range(25)]})
+    assert ctx.flush(30)                        # consumed, NOT closed
+    live = cq.drain()
+    assert len(live) >= 1                       # window 0 closed by wm
+    assert not ctx._stop.is_set()               # stream genuinely live
+    ctx.close()
+    cq.close()
+
+
+def test_late_elements_routed_to_side_channel(eng):
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0, allowed_lateness_s=0.2),
+                            delta_rows=4)
+    _push_all(ctx, {0: [([i], i) for i in range(30)]})
+    assert ctx.flush(30)
+    assert cq.late_count == 0
+    ctx.push(0, "s0", np.array([999]), event_ts=0.05)   # long closed
+    assert ctx.flush(30)
+    assert cq.late_count == 1
+    le = list(cq.late)[0]
+    assert le.missed == 1 and not le.assigned
+    assert int(np.asarray(le.payload)[0]) == 999
+    ctx.close()
+    results = cq.close()
+    # the late value leaked into no window
+    assert all(int(r.value) != 999 and int(r.value) < 500
+               for r in results if r.value is not None)
+
+
+def test_straggler_within_lateness_is_absorbed(eng):
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0, allowed_lateness_s=0.5),
+                            delta_rows=64)
+    # window 0 would close at wm >= 1.5; event clock reaches 1.3 first
+    _push_all(ctx, {0: [([1], s) for s in range(13)]})
+    assert ctx.flush(30)
+    ctx.push(0, "s0", np.array([100]), event_ts=0.9)    # straggler, on time
+    assert ctx.flush(30)
+    assert cq.late_count == 0
+    ctx.close()
+    by_start = {int(r.start): int(r.value) for r in cq.close()}
+    assert by_start[0] == 10 + 100             # straggler counted
+
+
+def test_seal_releases_a_silent_producer(eng):
+    ctx = StreamContext(n_producers=2)
+    ds = eng.from_stream(ctx).aggregate("count")
+    cq = eng.run_continuous(ds, EventWindow(1.0), delta_rows=4)
+    _push_all(ctx, {0: [([1], i) for i in range(25)]})  # producer 1 silent
+    assert ctx.flush(30)
+    assert cq.drain() == []                    # silent producer holds wm
+    cq.seal(1)
+    live = cq.drain()
+    assert len(live) >= 1                      # released
+    ctx.close()
+    cq.close()
+
+
+def test_callback_delivery_and_error_isolation(eng):
+    got, calls = [], [0]
+
+    def cb(res):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise RuntimeError("boom")         # must not kill the operator
+        got.append(res)
+
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0), on_result=cb,
+                            delta_rows=4)
+    _push_all(ctx, {0: [([i], i) for i in range(30)]})
+    ctx.close()
+    assert cq.close() == []                    # callback mode: no queue
+    assert calls[0] == 3 and len(got) == 2
+    assert cq.stats["callback_errors"] == 1
+
+
+def test_callback_runs_outside_operator_lock(eng):
+    """A blocking on_result callback must not hold the operator lock —
+    otherwise every consumer stalls behind it and a callback that waits
+    on ingestion progress (feedback loops) deadlocks the stream."""
+    ctx = StreamContext(n_producers=1, consumer_ratio=1)
+    lock_free = []
+
+    def cb(res):
+        # probe from another thread: the operator lock must be
+        # acquirable while the callback runs (RLock reentrancy makes a
+        # same-thread probe meaningless)
+        grabbed = threading.Event()
+
+        def probe():
+            if cq._lock.acquire(timeout=2.0):
+                cq._lock.release()
+                grabbed.set()
+
+        t = threading.Thread(target=probe)
+        t.start()
+        t.join(4.0)
+        lock_free.append(grabbed.is_set())
+        # re-entrant push into the observed stream (late, no cascade)
+        ctx.push(0, "s0", np.array([1]), event_ts=res.start)
+
+    ds = eng.from_stream(ctx).aggregate("count")
+    cq = eng.run_continuous(ds, EventWindow(1.0), on_result=cb,
+                            delta_rows=4)
+    _push_all(ctx, {0: [([1], i) for i in range(30)]})
+    assert ctx.close(deadline_s=30)
+    cq.close()
+    assert lock_free and all(lock_free)
+    assert cq.stats["callback_errors"] == 0
+    assert cq.late_count >= 1                  # the re-injections routed
+
+
+def test_bounded_result_queue_drops_oldest(eng):
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0), max_results=2,
+                            delta_rows=4)
+    _push_all(ctx, {0: [([i], i) for i in range(50)]})  # 5 windows
+    ctx.close()
+    results = cq.close()
+    assert len(results) == 2                   # newest two retained
+    assert sorted(int(r.start) for r in results) == [3, 4]
+    assert cq.stats["dropped_results"] == 3
+
+
+def test_addb_window_trace(eng, sage):
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0), delta_rows=4)
+    _push_all(ctx, {0: [([i], i) for i in range(20)]})
+    ctx.close()
+    cq.close()
+    trace = sage.addb.window_trace(cq.tag)
+    assert len(trace) == 2
+    assert {t["window_start"] for t in trace} == {0.0, 1.0}
+    assert all(t["rows"] == 10 and t["emit_latency_s"] >= 0
+               for t in trace)
+    assert sage.addb.window_trace("no-such-query") == []
+
+
+def test_memory_stays_bounded_by_delta(eng):
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(1.0), delta_rows=8)
+    _push_all(ctx, {0: [([1], i) for i in range(200)]})  # 20 windows
+    ctx.close()
+    cq.close()
+    st = cq.stats
+    assert st["peak_buffered_rows"] <= 8 * max(st["peak_open_windows"], 1)
+    assert st["open_windows"] == 0 and st["buffered_rows"] == 0
+    assert st["windows_closed"] == st["windows_opened"] == 20
+
+
+def test_sliding_windows_overlap(eng):
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("count")
+    cq = eng.run_continuous(ds, EventWindow(2.0, slide_s=1.0),
+                            delta_rows=4)
+    _push_all(ctx, {0: [([1], i) for i in range(40)]})   # ets in [0, 4)
+    ctx.close()
+    counts = {(r.start, r.end): int(r.value) for r in cq.close()}
+    assert counts[(0.0, 2.0)] == 20            # full overlap windows
+    assert counts[(1.0, 3.0)] == 20
+    assert counts[(-1.0, 1.0)] == 10           # leading partial
+    assert counts[(3.0, 5.0)] == 10            # trailing partial

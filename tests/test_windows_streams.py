@@ -14,7 +14,7 @@ except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
 from repro.core import MemoryWindow, StorageWindow, StreamContext, WindowAllocator
-from repro.core.streams import clovis_appender
+from repro.core.streams import clovis_appender, tee
 
 
 # ---------------------------------------------------------------------------
@@ -152,7 +152,92 @@ def test_stream_flush_deadline():
     for i in range(100):
         sc.push(0, "s", i)
     assert not sc.flush(deadline_s=0.05)      # cannot drain in time
+    # the failed flush left work behind, visibly: nothing was lost
+    stats = sc.stats
+    assert stats["pending"] > 0
+    assert stats["consumed"] < 100 and stats["dropped"] == 0
     assert sc.close(deadline_s=30)            # full drain succeeds
+    assert sc.stats["consumed"] == 100
+
+
+def test_stream_drop_oldest_accounting():
+    """drop_oldest evicts stale queued elements for fresh ones; every
+    produced element is accounted consumed or dropped, and the newest
+    survive (live telemetry semantics)."""
+    hold = threading.Event()
+    got = []
+
+    def attach(el):
+        hold.wait(1.0)
+        got.append(int(el.payload))
+
+    sc = StreamContext(n_producers=1, consumer_ratio=1, queue_depth=4,
+                       attach=attach, drop_policy="drop_oldest")
+    for i in range(32):
+        assert sc.push(0, "s", i)             # never rejects the new one
+    hold.set()
+    assert sc.close()
+    stats = sc.stats
+    assert stats["produced"] == 32
+    assert stats["dropped"] > 0
+    assert stats["consumed"] + stats["dropped"] == 32
+    assert stats["pending"] == 0
+    assert got[-1] == 31                      # freshest element retained
+
+
+def test_stream_rejects_unknown_drop_policy():
+    with pytest.raises(ValueError, match="drop_policy"):
+        StreamContext(n_producers=1, drop_policy="banana")
+
+
+def test_tee_exception_isolation():
+    """A raising branch must not starve the other branches, and the
+    failure must surface in the context's accounting."""
+    seen = []
+
+    def bad(el):
+        raise RuntimeError("boom")
+
+    def good(el):
+        seen.append(el.seq)
+
+    sc = StreamContext(n_producers=1, consumer_ratio=1,
+                       attach=tee(bad, good))
+    for i in range(10):
+        sc.push(0, "s", i)
+    assert sc.close()
+    assert sorted(seen) == list(range(10))    # good branch saw everything
+    assert sc.stats["attach_errors"] == 10    # failures counted, not hidden
+    assert sc.stats["consumed"] == 10         # drain accounting intact
+
+
+def test_stream_subscribe_observes_consumed_elements():
+    seen = []
+    sc = StreamContext(n_producers=2, consumer_ratio=1)
+    unsub = sc.subscribe(lambda el: seen.append((el.producer, el.seq)))
+    for i in range(5):
+        for p in range(2):
+            sc.push(p, f"s{p}", i, event_ts=float(i))
+    assert sc.flush(10)
+    assert sorted(seen) == [(p, i) for p in range(2) for i in range(5)]
+    unsub()
+    sc.push(0, "s0", 99)
+    assert sc.close()
+    assert len(seen) == 10                    # nothing after unsubscribe
+
+
+def test_stream_element_event_time_fallback():
+    sc = StreamContext(n_producers=1, consumer_ratio=1)
+    got = []
+    sc.subscribe(got.append)
+    sc.push(0, "s", 1)                        # no event_ts: arrival time
+    sc.push(0, "s", 2, event_ts=123.5)
+    assert sc.close()
+    by_seq = {el.seq: el for el in got}
+    assert by_seq[0].event_ts is None
+    assert by_seq[0].event_time == by_seq[0].ts
+    assert by_seq[1].event_time == 123.5
+    assert by_seq[1].producer == 0
 
 
 def test_clovis_appender_streams_to_object_store(sage):

@@ -1,12 +1,17 @@
 #!/usr/bin/env python3
 """Docs link checker — verify every relative markdown link in README.md
-and docs/*.md resolves to a real file (CI's docs job runs this, plus
-``python -m compileall src`` for syntax rot in non-imported modules).
+and docs/*.md resolves to a real file, and that every ``#fragment``
+(in-page or ``file.md#section``) matches a real heading anchor in the
+target document (CI's docs job runs this, plus ``python -m compileall
+src`` for syntax rot in non-imported modules).
 
-External links (http/https/mailto) and pure in-page anchors are
-skipped; ``file.md#section`` links are checked for the file part only.
-Exit status 0 when everything resolves, 1 otherwise (broken links are
-listed one per line).
+Anchors are derived from headings the way GitHub renders them: strip
+markdown link syntax, lowercase, drop everything but word characters /
+spaces / hyphens, turn spaces into hyphens, and suffix ``-1``, ``-2``…
+for duplicate headings.  Headings inside fenced code blocks do not
+count.  External links (http/https/mailto) are skipped.  Exit status 0
+when everything resolves, 1 otherwise (broken links are listed one per
+line).
 """
 from __future__ import annotations
 
@@ -16,7 +21,44 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+FENCE = re.compile(r"^(```|~~~)")
+MD_LINK_TEXT = re.compile(r"\[([^\]]*)\]\([^)]*\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+_anchor_cache: dict = {}
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's heading → anchor id slug."""
+    text = MD_LINK_TEXT.sub(r"\1", heading)      # keep link text only
+    text = text.replace("`", "").strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md: Path) -> set:
+    """Every anchor id the rendered document exposes (duplicate
+    headings get -1, -2… suffixes, matching GitHub)."""
+    if md in _anchor_cache:
+        return _anchor_cache[md]
+    out, seen = set(), {}
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING.match(line)
+        if not m:
+            continue
+        a = github_anchor(m.group(1))
+        n = seen.get(a, 0)
+        seen[a] = n + 1
+        out.add(a if n == 0 else f"{a}-{n}")
+    _anchor_cache[md] = out
+    return out
 
 
 def broken_links(md: Path) -> list:
@@ -25,11 +67,15 @@ def broken_links(md: Path) -> list:
         target = m.group(1)
         if target.startswith(SKIP_PREFIXES):
             continue
-        path = target.split("#", 1)[0]
-        if not path:                      # pure in-page anchor
+        path, _, frag = target.partition("#")
+        dest = md if not path else (md.parent / path).resolve()
+        if path and not dest.exists():
+            out.append(f"broken link -> {target}")
             continue
-        if not (md.parent / path).exists():
-            out.append(target)
+        if frag and dest.suffix == ".md":
+            if frag not in anchors_of(dest):
+                out.append(f"broken anchor -> {target} "
+                           f"(no heading '#{frag}' in {dest.name})")
     return out
 
 
@@ -43,13 +89,14 @@ def main() -> int:
             failures += 1
             continue
         checked += 1
-        for target in broken_links(md):
-            print(f"{md.relative_to(ROOT)}: broken link -> {target}")
+        for problem in broken_links(md):
+            print(f"{md.relative_to(ROOT)}: {problem}")
             failures += 1
     if failures:
-        print(f"{failures} broken link(s) across {checked} file(s)")
+        print(f"{failures} broken link(s)/anchor(s) across {checked} file(s)")
         return 1
-    print(f"checked {checked} markdown file(s): all relative links resolve")
+    print(f"checked {checked} markdown file(s): all relative links and "
+          "anchors resolve")
     return 0
 
 
