@@ -2,7 +2,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-percipience bench-analytics bench-streaming docs-check
+.PHONY: test bench bench-percipience bench-analytics bench-streaming \
+        bench-dht bench-cluster docs-check
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -24,3 +25,9 @@ bench-analytics:
 
 bench-streaming:
 	$(PYTHON) -m benchmarks.run --only streaming
+
+bench-dht:
+	$(PYTHON) -m benchmarks.run --only dht
+
+bench-cluster:
+	$(PYTHON) -m benchmarks.run --only cluster --quick

@@ -34,7 +34,12 @@ class WindowDHT:
                 vol[i, 0] = k
                 vol[i, 1] = v
             else:                           # collision -> overflow heap
-                self.heap.array[self.heap_top % self.heap.array.shape[0]] = (k, v)
+                if self.heap_top >= self.heap.array.shape[0]:
+                    # wrapping around would silently overwrite live
+                    # entries — a full heap is a capacity error
+                    raise IOError(
+                        f"overflow heap full ({self.heap_top} entries)")
+                self.heap.array[self.heap_top] = (k, v)
                 self.heap_top += 1
 
     def sync(self):

@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
                                              streams|clovis|percipience|
-                                             analytics|streaming] [--quick]
+                                             analytics|streaming|cluster]
+                                            [--quick]
 """
 from __future__ import annotations
 
@@ -24,7 +25,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_analytics, bench_checkpoint, bench_clovis,
-                            bench_dht, bench_percipience,
+                            bench_cluster, bench_dht, bench_percipience,
                             bench_stream_windows, bench_streams)
 
     suites = {
@@ -55,6 +56,12 @@ def main() -> None:
         # drain-then-batch over the same live stream
         "streaming": lambda: bench_stream_windows.run_streaming(
             n_elements=800 if args.quick else 2000),
+        # scale-out cluster: query throughput at 1/4/16 nodes +
+        # kill-a-node-mid-scan byte-identical failover check
+        "cluster": lambda: bench_cluster.run(
+            partitions=96 if args.quick else 128,
+            rows=512 if args.quick else 2048,
+            repeats=2 if args.quick else 3),
     }
     if args.only is not None and args.only not in suites:
         ap.error(f"unknown benchmark {args.only!r} for --only; known "

@@ -156,6 +156,7 @@ class StatsCatalog:
     def __init__(self, max_partitions: int = 8192):
         self.max_partitions = max_partitions
         self._stats: Dict[str, PartitionStats] = {}
+        self._node_obs: Dict[str, Dict[str, float]] = {}
         self._store = None
         self._lock = threading.Lock()
 
@@ -268,6 +269,41 @@ class StatsCatalog:
     def __len__(self) -> int:
         with self._lock:
             return len(self._stats)
+
+    # -- per-node fragment-latency feedback (cluster cost model) -------
+
+    def observe_node_latency(self, node: str, nbytes: int, wall_s: float,
+                             alpha: float = 0.25):
+        """Fold one observed shipped-fragment execution into the node's
+        effective-bandwidth estimate (EWMA of bytes scanned / wall
+        seconds).  The cluster shipper reports every routed fragment
+        here, so the cost model's per-node TierParams converge from the
+        device model's nameplate numbers toward what each node actually
+        delivers — a busy or degraded node gets discounted without any
+        explicit signal (ROADMAP's observed-feedback item, scoped to
+        the per-node timing the placement decision needs)."""
+        bw = nbytes / max(wall_s, 1e-9)
+        with self._lock:
+            obs = self._node_obs.setdefault(
+                node, {"read_bw": bw, "samples": 0.0, "bytes": 0.0,
+                       "wall_s": 0.0})
+            obs["read_bw"] += alpha * (bw - obs["read_bw"])
+            obs["samples"] += 1
+            obs["bytes"] += nbytes
+            obs["wall_s"] += wall_s
+
+    def node_read_bw(self, node: str) -> Optional[float]:
+        """Learned effective scan bandwidth of a node (bytes/s), or
+        None before the first observation."""
+        with self._lock:
+            obs = self._node_obs.get(node)
+            return obs["read_bw"] if obs else None
+
+    def node_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-node observation summary: {node: {read_bw, samples,
+        bytes, wall_s}} — bench_cluster reports it next to throughput."""
+        with self._lock:
+            return {n: dict(o) for n, o in self._node_obs.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -510,6 +546,11 @@ class CostContext:
     load: Dict[str, float] = field(default_factory=dict)
     cache_probe: Optional[Callable[[str, str], bool]] = None
     tiers: Optional[Dict[str, TierParams]] = None
+    # per-partition TierParams override — the cluster planner maps each
+    # partition to the *owning node's* tier parameters (blended with the
+    # node's observed fragment bandwidth), which a store-global tier map
+    # cannot express
+    tier_of: Optional[Callable[[str], Optional[TierParams]]] = None
 
     def place(self, plan) -> Dict[str, Decision]:
         """Per-partition decisions for a PhysicalPlan (duck-typed:
@@ -525,7 +566,10 @@ class CostContext:
                                     "fragment + object version")
                 continue
             try:
-                tier = tiers.get(self.store.meta(oid).layout.tier)
+                if self.tier_of is not None:
+                    tier = self.tier_of(oid)
+                else:
+                    tier = tiers.get(self.store.meta(oid).layout.tier)
                 size = self.store.read_size(oid)
             except KeyError:
                 out[oid] = Decision(SHIP, 0.0, 0.0, 0, None,

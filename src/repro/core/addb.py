@@ -107,6 +107,59 @@ class Addb:
                         "est_bytes": r.nbytes, "est_s": r.latency_s})
         return out
 
+    # ---- HA repair-engine decision trace ----
+
+    def record_ha(self, kind: str, subject: str, detail: str = "-",
+                  nbytes: int = 0, latency_s: float = 0.0, ok: bool = True):
+        """Record one HA repair-engine decision (op ``ha_decision``):
+        ``kind`` is repair | evict | scrub | straggler, ``subject`` the
+        device (repair/evict/straggler) or object (scrub) acted on.
+        The trace is how automated repair stays auditable — the cluster
+        layer reads it next to the analytics plan trace when diagnosing
+        a failover (docs/cluster.md)."""
+        self.record("ha_decision", f"{kind}:{subject}", detail,
+                    int(nbytes), float(latency_s), ok)
+
+    def ha_trace(self, kind: Optional[str] = None) -> List[Dict]:
+        """HA decision records as dicts (optionally one kind), oldest
+        first: {kind, subject, detail, n, latency_s, ok}."""
+        out: List[Dict] = []
+        for r in self.records("ha_decision"):
+            k, _, subject = r.entity.partition(":")
+            if kind is not None and k != kind:
+                continue
+            out.append({"kind": k, "subject": subject, "detail": r.device,
+                        "n": r.nbytes, "latency_s": r.latency_s, "ok": r.ok})
+        return out
+
+    # ---- cluster fragment-routing trace ----
+
+    def record_route(self, oid: str, node: str, *, rerouted: bool,
+                     nbytes: int = 0, latency_s: float = 0.0,
+                     ok: bool = True):
+        """Record one cluster-routed fragment/read (op
+        ``cluster_route``): which node actually served object ``oid``,
+        and whether it was the ring primary or a replica reached by
+        failover re-routing.  Together with ``plan_trace`` this is the
+        evidence a kill-a-node-mid-scan run really took the replica
+        path (bench_cluster asserts on it)."""
+        self.record("cluster_route", oid,
+                    f"{'reroute' if rerouted else 'primary'}:{node}",
+                    int(nbytes), float(latency_s), ok)
+
+    def route_trace(self, oid: Optional[str] = None) -> List[Dict]:
+        """Cluster routing records as dicts (optionally one object),
+        oldest first: {oid, node, rerouted, nbytes, latency_s, ok}."""
+        out: List[Dict] = []
+        for r in self.records("cluster_route"):
+            if oid is not None and r.entity != oid:
+                continue
+            mode, _, node = r.device.partition(":")
+            out.append({"oid": r.entity, "node": node,
+                        "rerouted": mode == "reroute", "nbytes": r.nbytes,
+                        "latency_s": r.latency_s, "ok": r.ok})
+        return out
+
     # ---- continuous-query window trace ----
 
     def record_window(self, query: str, stream_id: str, window_start: float,

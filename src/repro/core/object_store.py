@@ -525,6 +525,51 @@ class ObjectStore:
             self._gc_version(meta_old, old_version)
         self._emit("migrate", oid, {"tier": new_layout.tier})
 
+    def scrub_object(self, oid: str) -> Tuple[int, int]:
+        """Integrity scrub (HA backend): verify every replica of every
+        block against the recorded checksum and rewrite corrupt or
+        missing replicas from an intact copy (falling back to the
+        substitute-scan / parity-rebuild read path when no placement
+        replica is clean).  Internal reads — no demand-access
+        bookkeeping.  Returns ``(blocks_checked, replicas_repaired)``."""
+        meta = self._meta[oid]
+        repaired = 0
+        for idx in range(meta.nblocks):
+            want = meta.checksums.get(idx)
+            good: Optional[bytes] = None
+            bad: List[Tuple[TierDevice, str]] = []
+            for dev, key in self._placements(meta, idx, meta.version):
+                if dev.failed:
+                    continue
+                try:
+                    if not dev.has_block(key):
+                        bad.append((dev, key))
+                        continue
+                    blk = dev.read_block(key)
+                except (IOError, OSError):
+                    bad.append((dev, key))
+                    continue
+                if want is not None and zlib.crc32(blk) != want:
+                    bad.append((dev, key))
+                    continue
+                if good is None:
+                    good = blk
+            if good is None:
+                try:
+                    good = self._read_block(meta, idx, meta.version,
+                                            record=False)
+                except IOError:
+                    continue            # unrecoverable block: leave as-is
+            for dev, key in bad:
+                try:
+                    dev.write_block(key, good)
+                    repaired += 1
+                except (IOError, OSError):
+                    continue
+        if repaired:
+            self._emit("repair", oid, {"scrub": True, "replicas": repaired})
+        return meta.nblocks, repaired
+
     def repair_object(self, oid: str, failed_device: str) -> bool:
         """Re-silver replicas / rebuild parity after a device failure."""
         meta = self._meta[oid]

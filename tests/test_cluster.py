@@ -1,0 +1,256 @@
+"""Scale-out cluster tests: ring placement properties, K-way
+replication, read-repair, join/leave rebalance deltas, HA-driven node
+eviction, and mid-query failover (byte-identical results)."""
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterClovis, HashRing, plan_rebalance
+from repro.core import Layout
+from repro.core import layouts as lay
+from repro.core.tiers import T2_FLASH
+
+MIRROR = Layout(lay.MIRRORED, T2_FLASH, 2)
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = ClusterClovis(tmp_path / "cluster", nodes=4, replicas=2)
+    yield c
+    c.close()
+
+
+def _load(cluster, n=12, rows=64, seed=3):
+    rng = np.random.default_rng(seed)
+    arrays = {}
+    for i in range(n):
+        arr = rng.normal(size=(rows, 3))
+        oid = f"part/{i:02d}"
+        cluster.put_array(oid, arr, container="events", layout=MIRROR)
+        arrays[oid] = arr
+    return arrays
+
+
+# ---------------------------------------------------------------------------
+# ring placement properties
+# ---------------------------------------------------------------------------
+
+def test_ring_owners_deterministic_and_distinct():
+    def build():
+        r = HashRing(vnodes=32)
+        for n in ("a", "b", "c", "d"):
+            r.add_node(n)
+        return r
+    r1, r2 = build(), build()
+    for key in (f"k/{i}" for i in range(50)):
+        owners = r1.owners(key, 3)
+        assert owners == r2.owners(key, 3)      # placement is stable
+        assert len(owners) == len(set(owners)) == 3
+
+
+def test_ring_prefers_distinct_failure_domains():
+    r = HashRing(vnodes=32)
+    for n, dom in (("a1", "rackA"), ("a2", "rackA"),
+                   ("b1", "rackB"), ("c1", "rackC")):
+        r.add_node(n, dom)
+    for key in (f"k/{i}" for i in range(50)):
+        two = r.owners(key, 2)
+        assert r.domain_of(two[0]) != r.domain_of(two[1])
+        three = r.owners(key, 3)
+        assert len({r.domain_of(n) for n in three}) == 3
+        assert three[:2] == two                 # prefixes nest
+
+
+def test_ring_spreads_load_across_nodes():
+    r = HashRing(vnodes=64)
+    for n in ("a", "b", "c", "d"):
+        r.add_node(n)
+    counts = {n: 0 for n in r.nodes()}
+    for i in range(400):
+        counts[r.owners(f"k/{i}", 1)[0]] += 1
+    assert min(counts.values()) > 0.3 * max(counts.values())
+
+
+def test_rebalance_plan_is_ring_delta_only():
+    r = HashRing(vnodes=32)
+    for n in ("a", "b", "c", "d"):
+        r.add_node(n)
+    keys = [f"k/{i}" for i in range(200)]
+    before = r.owner_map(keys, 2)
+    r.add_node("e")
+    moves = plan_rebalance(before, r.owner_map(keys, 2))
+    # consistent hashing: a 4->5 join relocates ~1/5 of replica slots,
+    # never a reshuffle
+    assert 0 < len(moves) < len(keys) // 2
+    assert all(set(m.add) == {"e"} and not m.drop or m.drop
+               for m in moves)
+    untouched = set(keys) - {m.key for m in moves}
+    after = r.owner_map(keys, 2)
+    assert all(before[k] == after[k] for k in untouched)
+
+
+# ---------------------------------------------------------------------------
+# replication + reads
+# ---------------------------------------------------------------------------
+
+def test_put_replicates_k_ways_with_version_stamp(cluster):
+    arrays = _load(cluster)
+    for oid in arrays:
+        holders = cluster.live_holders(oid)
+        assert len(holders) == 2
+        assert {h.node_id for h in holders} == set(cluster.owners_of(oid))
+        versions = {h.store.meta(oid).attrs["cluster_version"]
+                    for h in holders}
+        assert len(versions) == 1               # replicas agree
+    assert cluster.container("events") == sorted(arrays)
+
+
+def test_get_array_roundtrip_and_primary_routing(cluster):
+    arrays = _load(cluster, n=4)
+    for oid, arr in arrays.items():
+        np.testing.assert_array_equal(cluster.get_array(oid), arr)
+
+
+def test_read_fails_over_to_replica_when_primary_dies(cluster):
+    arrays = _load(cluster)
+    oid = next(iter(arrays))
+    cluster.kill_node(cluster.primary_of(oid))
+    np.testing.assert_array_equal(cluster.get_array(oid), arrays[oid])
+
+
+def test_read_repair_resyncs_stale_replica(cluster):
+    arrays = _load(cluster, n=4)
+    oid = next(iter(arrays))
+    holders = cluster.live_holders(oid)
+    stale, fresh_arr = holders[0], arrays[oid]
+    # wind one replica's version back: the next read must spot the
+    # divergence and re-silver it from the freshest copy
+    stale.store.meta(oid).attrs["cluster_version"] = 0
+    np.testing.assert_array_equal(cluster.get_array(oid), fresh_arr)
+    assert (stale.store.meta(oid).attrs["cluster_version"]
+            == cluster.store.meta(oid).attrs["cluster_version"] > 0)
+    repairs = cluster.addb.ha_trace("read_repair")
+    assert any(t["subject"] == oid and t["detail"] == stale.node_id
+               for t in repairs)
+
+
+# ---------------------------------------------------------------------------
+# membership: join / leave / evict
+# ---------------------------------------------------------------------------
+
+def test_join_moves_only_ring_delta_partitions(cluster):
+    arrays = _load(cluster)
+    summary = cluster.add_node("node99")
+    assert 0 < summary["partitions"] < len(arrays)
+    for oid, arr in arrays.items():             # everything still reads
+        np.testing.assert_array_equal(cluster.get_array(oid), arr)
+        assert len(cluster.live_holders(oid)) == 2
+    joins = cluster.addb.ha_trace("join")
+    assert joins and joins[-1]["subject"] == "node99"
+
+
+def test_graceful_leave_preserves_replication(cluster):
+    arrays = _load(cluster)
+    victim = cluster.primary_of(next(iter(arrays)))
+    cluster.remove_node(victim)
+    for oid, arr in arrays.items():
+        np.testing.assert_array_equal(cluster.get_array(oid), arr)
+        holders = cluster.live_holders(oid)
+        assert len(holders) == 2
+        assert victim not in {h.node_id for h in holders}
+
+
+def test_evict_rereplicates_from_survivors(cluster):
+    arrays = _load(cluster)
+    victim = cluster.primary_of(next(iter(arrays)))
+    cluster.kill_node(victim)                   # data gone, then evicted
+    cluster.evict_node(victim)
+    assert victim not in cluster.ring
+    for oid, arr in arrays.items():
+        holders = cluster.live_holders(oid)
+        assert len(holders) == 2                # redundancy restored
+        assert victim not in {h.node_id for h in holders}
+        np.testing.assert_array_equal(cluster.get_array(oid), arr)
+    assert cluster.evict_node(victim)["partitions"] == 0   # idempotent
+
+
+def test_device_burst_on_healthy_node_does_not_evict_it(cluster):
+    """One failed device is repaired node-locally (HA re-silvers onto
+    the node's surviving devices) — the ring must not change."""
+    _load(cluster)
+    node = cluster.any_alive_node()
+    dev = node.store.pools[T2_FLASH].devices[0]
+    dev.fail()
+    import time
+    from repro.core import FailureEvent
+    for _ in range(node.ha.error_threshold):
+        node.ha.observe(FailureEvent(time.time(), "io_error", dev.name))
+    assert dev.name in node.ha.evicted          # device-level eviction...
+    assert node.node_id in cluster.ring         # ...but the node stays
+
+
+# ---------------------------------------------------------------------------
+# analytics over the cluster
+# ---------------------------------------------------------------------------
+
+def _sum_query(eng):
+    from repro.analytics import col
+    return eng.scan("events").filter(col(0) > 0.0).aggregate("sum",
+                                                             value=col(1))
+
+
+def test_cluster_analytics_matches_single_node(cluster, tmp_path):
+    from repro.core import Clovis
+    arrays = _load(cluster)
+    single = Clovis(tmp_path / "single")
+    for oid, arr in arrays.items():
+        single.put_array(oid, arr, container="events")
+    ref = single.analytics(use_kernels=False).run(
+        _sum_query(single.analytics(use_kernels=False))).value
+    eng = cluster.analytics(use_kernels=False)
+    got = eng.run(_sum_query(eng)).value
+    assert np.asarray(got).tobytes() == np.asarray(ref).tobytes()
+    eng.close()
+
+
+def test_kill_node_mid_query_is_byte_identical(cluster):
+    """The paper's HA story: a node dies mid-scan, its fragments
+    re-route to replicas, the cluster evicts it — and the query result
+    is byte-for-byte what the healthy run produced."""
+    _load(cluster, n=12)
+    eng = cluster.analytics(use_kernels=False, partial_cache_size=0,
+                            max_workers=2)
+    ref = np.asarray(eng.run(_sum_query(eng)).value).tobytes()
+
+    counts = {}
+    for oid in cluster.container("events"):
+        p = cluster.primary_of(oid)
+        counts[p] = counts.get(p, 0) + 1
+    victim = max(counts, key=counts.get)
+    state = {"ships": 0}
+
+    def killer(res):
+        state["ships"] += 1
+        if state["ships"] == 2:
+            cluster.kill_node(victim)
+
+    cluster.shipper.add_observer(killer)
+    got = np.asarray(eng.run(_sum_query(eng)).value).tobytes()
+    cluster.shipper.remove_observer(killer)
+    eng.close()
+
+    assert got == ref
+    assert any(t["rerouted"] for t in cluster.addb.route_trace())
+    assert victim not in cluster.ring           # HA chain evicted it
+    assert all(len(cluster.live_holders(o)) == 2
+               for o in cluster.container("events"))
+
+
+def test_route_trace_records_which_node_served(cluster):
+    _load(cluster, n=4)
+    cluster.shipper.register("nbytes", lambda a: int(a.nbytes))
+    oid = cluster.container("events")[0]
+    res = cluster.shipper.ship("nbytes", oid)
+    assert res.ok
+    trace = cluster.addb.route_trace(oid)
+    assert trace and trace[-1]["node"] == cluster.primary_of(oid)
+    assert not trace[-1]["rerouted"]

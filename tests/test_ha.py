@@ -1,0 +1,159 @@
+"""HA monitor edge paths: sub-threshold noise, checksum-burst scrub,
+straggler demotion, and the subscription hook the cluster layer builds
+its node-eviction logic on (repro.cluster tests live in
+test_cluster.py)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import FailureEvent, HAMonitor, Layout
+from repro.core import layouts as lay
+from repro.core.tiers import T2_FLASH
+
+
+@pytest.fixture()
+def ha(sage):
+    return HAMonitor(sage.store, error_threshold=3, window_s=60)
+
+
+def _mirrored(sage, oid="h/obj", payload=b"z" * 768):
+    sage.create(oid, block_size=128, layout=Layout(lay.MIRRORED, T2_FLASH, 2))
+    sage.put(oid, payload)
+    return oid, payload
+
+
+# ---------------------------------------------------------------------------
+# digestion thresholds
+# ---------------------------------------------------------------------------
+
+def test_sub_threshold_noise_stays_quiet(sage, ha):
+    """Isolated transient errors are noise: below the per-device window
+    threshold nothing is repaired, evicted, or recorded."""
+    _mirrored(sage)
+    devs = sage.pools[T2_FLASH].devices
+    # 2 errors on one device (< 3) + 1 on another: neither crosses
+    for _ in range(2):
+        ha.observe(FailureEvent(time.time(), "io_error", devs[0].name))
+    ha.observe(FailureEvent(time.time(), "io_error", devs[1].name))
+    assert ha.evicted == [] and ha.repaired == []
+    assert sage.addb.ha_trace() == []
+    assert not devs[0].failed and not devs[1].failed
+
+
+def test_stale_events_age_out_of_the_window(sage, ha):
+    """Three errors spread over more than the window never form a
+    burst — the quasi-ordered digest only counts recent history."""
+    _mirrored(sage)
+    dev = sage.pools[T2_FLASH].devices[0]
+    old = time.time() - ha.window_s - 1
+    for _ in range(2):
+        ha.observe(FailureEvent(old, "io_error", dev.name))
+    ha.observe(FailureEvent(time.time(), "io_error", dev.name))
+    assert dev.name not in ha.evicted
+
+
+# ---------------------------------------------------------------------------
+# checksum burst -> integrity scrub
+# ---------------------------------------------------------------------------
+
+def test_checksum_burst_triggers_object_scrub(sage, ha):
+    """One object's replicas reporting checksum mismatches across
+    devices crosses the per-object threshold (scrub) while every
+    per-device count stays sub-threshold (no device eviction)."""
+    oid, payload = _mirrored(sage)
+    devs = sage.pools[T2_FLASH].devices
+    for dev in (devs[0], devs[1], devs[0]):
+        ha.observe(FailureEvent(time.time(), "checksum", dev.name,
+                                entity=oid, detail="checksum mismatch"))
+    assert oid in ha.scrubbed
+    trace = sage.addb.ha_trace("scrub")
+    assert len(trace) == 1 and trace[0]["subject"] == oid and trace[0]["ok"]
+    assert devs[0].name in trace[0]["detail"]
+    # the burst evidence is consumed: one burst = one scrub
+    assert not any(e.entity == oid and e.kind == "checksum"
+                   for e in ha.events)
+    # no device crossed its own burst threshold: scrub is per-object
+    assert ha.evicted == []
+    assert sage.get(oid) == payload
+
+
+def test_scrub_runs_once_per_object(sage, ha):
+    oid, _ = _mirrored(sage)
+    dev = sage.pools[T2_FLASH].devices[1]
+    for _ in range(6):
+        ha.observe(FailureEvent(time.time(), "checksum", dev.name,
+                                entity=oid))
+    assert ha.scrubbed.count(oid) == 1
+    assert len(sage.addb.ha_trace("scrub")) == 1
+
+
+# ---------------------------------------------------------------------------
+# straggler demotion
+# ---------------------------------------------------------------------------
+
+def test_straggler_demotion_report(sage, ha):
+    """A device whose p99 latency dwarfs its tier model is reported:
+    ADDB straggler decision + subscriber notification + a straggler
+    event entering the monitor's own window."""
+    slow = sage.pools[T2_FLASH].devices[0]
+    fast = sage.pools[T2_FLASH].devices[1]
+    for _ in range(20):
+        sage.addb.record("get", "o/x", slow.name, 4096, latency_s=1.0)
+        sage.addb.record("get", "o/x", fast.name, 4096,
+                         latency_s=fast.model.latency)
+    seen = []
+    ha.subscribe(lambda kind, subject, info: seen.append((kind, subject,
+                                                          info)))
+    out = ha.straggler_report(sage.addb, factor=5.0)
+    assert out == [slow.name]
+    trace = sage.addb.ha_trace("straggler")
+    assert [t["subject"] for t in trace] == [slow.name]
+    assert any(k == "straggler" and s == slow.name and
+               info["p99_s"] == pytest.approx(1.0) for k, s, info in seen)
+    assert any(e.kind == "straggler" and e.device == slow.name
+               for e in ha.events)
+
+
+# ---------------------------------------------------------------------------
+# subscription hook (what the cluster layer consumes)
+# ---------------------------------------------------------------------------
+
+def test_subscribers_see_repair_then_evict_with_counts(sage, ha):
+    oid, payload = _mirrored(sage)
+    dev = sage.pools[T2_FLASH].devices[0]
+    seen = []
+    ha.subscribe(lambda kind, subject, info: seen.append((kind, subject,
+                                                          info)))
+    for _ in range(3):
+        ha.observe(FailureEvent(time.time(), "io_error", dev.name))
+    kinds = [(k, s) for k, s, _ in seen]
+    assert ("repair", dev.name) in kinds and ("evict", dev.name) in kinds
+    assert kinds.index(("repair", dev.name)) < kinds.index(("evict",
+                                                            dev.name))
+    evict_info = next(i for k, s, i in seen if k == "evict")
+    # the cluster's node-death heuristic reads these two counts
+    assert evict_info["affected"] >= 1
+    assert evict_info["repaired"] == evict_info["affected"]
+    assert sage.get(oid) == payload
+
+
+def test_unsubscribe_and_broken_listener_isolation(sage, ha):
+    _mirrored(sage, oid="h/a")
+    devs = sage.pools[T2_FLASH].devices
+    calls = []
+
+    def bomb(kind, subject, info):
+        raise RuntimeError("listener crashed")
+
+    def listener(kind, subject, info):
+        calls.append(kind)
+
+    ha.subscribe(bomb)
+    ha.subscribe(listener)
+    ha.engage_repair(devs[0].name)
+    assert "repair" in calls          # bomb did not break the chain
+    ha.unsubscribe(listener)
+    n = len(calls)
+    ha.engage_repair(devs[1].name)
+    assert len(calls) == n            # unsubscribed: no further calls
