@@ -3,11 +3,12 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench bench-percipience bench-analytics bench-streaming \
-        bench-dht bench-cluster docs-check
+        bench-dht bench-cluster bench-serving docs-check
 
-# tier-1 verify (ROADMAP.md)
+# tier-1 verify (ROADMAP.md); CI adds PYTEST_EXTRA="--timeout=120"
+# (pytest-timeout is in requirements-dev, not assumed locally)
 test:
-	$(PYTHON) -m pytest -x -q
+	$(PYTHON) -m pytest -x -q $(PYTEST_EXTRA)
 
 # docs link check + syntax-rot check (what CI's docs job runs)
 docs-check:
@@ -31,3 +32,7 @@ bench-dht:
 
 bench-cluster:
 	$(PYTHON) -m benchmarks.run --only cluster --quick
+
+# full-size on purpose: acceptance needs the 10/100/1000-session levels
+bench-serving:
+	$(PYTHON) -m benchmarks.run --only serving

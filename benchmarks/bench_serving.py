@@ -1,0 +1,270 @@
+"""Multi-tenant serving front door — tail latency, fairness, shedding.
+
+Zipfian multi-tenant load against ``Clovis.serving()`` at 10/100/1000
+concurrent sessions.  Each session is a real thread owned by one of
+four equal-quota tenants, drawing queries zipfian from a small template
+mix (repeats dominate — the regime the cross-query fragment
+single-flight and warm plan cache exist for).  Per level the bench
+reports:
+
+  * p50 / p99 submit→response latency (over completed queries);
+  * Jain fairness index across the equal-quota tenants' completed
+    queries (equal offered load → index should be ~1);
+  * fragment dedup hit rate (in-flight single-flight shares) and
+    partial/plan-cache hit counters;
+  * shed rate (quota + queue-bound + deadline).
+
+A separate isolation leg runs the middle level twice — with and
+without a greedy tenant whose byte quota covers almost nothing — and
+compares the steady tenants' p99: quota-exceeded tenants must shed at
+admission without smearing tail latency onto everyone else.
+
+Emits the usual CSV rows plus ``results/BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import emit
+
+EQUAL_TENANTS = ("t0", "t1", "t2", "t3")
+
+# zipfian template mix: declarative op-spec chains (what a remote
+# front door would receive on the wire)
+TEMPLATES = (
+    ({"op": "filter", "expr": {"t": "bin", "op": ">",
+                               "l": {"t": "col", "i": 0},
+                               "r": {"t": "lit", "v": 25}}},
+     {"op": "aggregate", "agg": "count"}),
+    ({"op": "aggregate", "agg": "sum", "value": {"t": "col", "i": 1}},),
+    ({"op": "key_by", "key": {"t": "col", "i": 0}},
+     {"op": "aggregate", "agg": "mean", "value": {"t": "col", "i": 1}}),
+    ({"op": "aggregate", "agg": "histogram", "value": {"t": "col", "i": 2},
+      "bins": 16, "vrange": (-40.0, 40.0)},),
+    ({"op": "filter", "expr": {"t": "bin", "op": ">",
+                               "l": {"t": "col", "i": 0},
+                               "r": {"t": "lit", "v": 40}}},
+     {"op": "aggregate", "agg": "sum", "value": {"t": "col", "i": 2}}),
+)
+
+
+def _build(partitions: int, rows: int):
+    from repro.core.addb import Addb
+    from repro.core.clovis import Clovis
+    root = Path(tempfile.mkdtemp(prefix="bench_serving_"))
+    cv = Clovis(root, addb=Addb(), devices_per_tier=3)
+    rng = np.random.default_rng(11)
+    for i in range(partitions):
+        a = np.empty((rows, 4), np.int32)
+        a[:, 0] = rng.integers(0, 50, rows)
+        a[:, 1] = rng.integers(0, 100, rows)
+        a[:, 2] = rng.integers(-40, 40, rows)
+        a[:, 3] = i
+        cv.put_array(f"events/{i:03d}", a, container="events")
+    return cv
+
+
+def _zipf_weights(n: int, s: float = 1.1) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1) ** s
+    return w / w.sum()
+
+
+def _jain(xs: List[float]) -> float:
+    xs = [float(x) for x in xs]
+    denom = len(xs) * sum(x * x for x in xs)
+    return (sum(xs) ** 2) / denom if denom > 0 else 1.0
+
+
+def _pct(lat: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(lat), p)) if lat else 0.0
+
+
+def _drive(svc, sessions: int, queries_per_session: int, *,
+           tenants=EQUAL_TENANTS, greedy: Optional[str] = None,
+           seed: int = 0) -> Dict:
+    """Run ``sessions`` threads of zipfian queries; returns per-tenant
+    latency lists and shed counts."""
+    from repro.serving import AdmissionRejected, QueryRequest
+    weights = _zipf_weights(len(TEMPLATES))
+    lat: Dict[str, List[float]] = {t: [] for t in tenants}
+    shed: Dict[str, int] = {t: 0 for t in tenants}
+    errors: List[str] = []
+    lock = threading.Lock()
+    if greedy is not None:
+        lat[greedy] = []
+        shed[greedy] = 0
+    start = threading.Barrier(sessions + 1)
+
+    def session(idx: int):
+        rng = np.random.default_rng(seed + idx)
+        pool = tenants if greedy is None else tuple(tenants) + (greedy,)
+        tenant = pool[idx % len(pool)]
+        start.wait()
+        for _ in range(queries_per_session):
+            tmpl = TEMPLATES[int(rng.choice(len(TEMPLATES), p=weights))]
+            t0 = time.perf_counter()
+            try:
+                sub = svc.submit(QueryRequest(tenant, "events", tmpl))
+            except AdmissionRejected:
+                with lock:
+                    shed[tenant] += 1
+                continue
+            except Exception as e:      # a bench bug, not load shedding
+                with lock:
+                    errors.append(f"{type(e).__name__}: {e}")
+                return
+            resp = sub.result(timeout=120.0)
+            dt = time.perf_counter() - t0
+            with lock:
+                if resp.ok:
+                    lat[tenant].append(dt)
+                elif resp.shed:
+                    shed[tenant] += 1
+                else:
+                    errors.append(resp.error)
+
+    threads = [threading.Thread(target=session, args=(i,))
+               for i in range(sessions)]
+    for t in threads:
+        t.start()
+    t_wall = time.perf_counter()
+    start.wait()
+    for t in threads:
+        t.join()
+    t_wall = time.perf_counter() - t_wall
+    if errors:
+        raise AssertionError(f"serving errors: {errors[:3]}")
+    return {"lat": lat, "shed": shed, "wall_s": t_wall}
+
+
+def _level(sessions: int, queries_per_session: int, partitions: int,
+           rows: int, workers: int) -> Dict:
+    from repro.serving import TenantConfig
+    cv = _build(partitions, rows)
+    svc = cv.serving([TenantConfig(t, max_queue=4096)
+                      for t in EQUAL_TENANTS],
+                     workers=workers, use_kernels=False)
+    try:
+        run = _drive(svc, sessions, queries_per_session)
+        stats = svc.stats()
+    finally:
+        svc.close()
+    all_lat = [x for xs in run["lat"].values() for x in xs]
+    fl = stats["flights"]
+    dedup_rate = (fl["dedup_hits"] / (fl["ships"] + fl["dedup_hits"])
+                  if fl["ships"] + fl["dedup_hits"] else 0.0)
+    completed = {t: stats["tenants"][t]["completed"] for t in EQUAL_TENANTS}
+    total = len(all_lat) + sum(run["shed"].values())
+    out = {
+        "sessions": sessions,
+        "queries": total,
+        "completed": len(all_lat),
+        "wall_s": run["wall_s"],
+        "p50_ms": _pct(all_lat, 50) * 1e3,
+        "p99_ms": _pct(all_lat, 99) * 1e3,
+        "jain_completed": _jain(list(completed.values())),
+        "per_tenant_completed": completed,
+        "shed_rate": (sum(run["shed"].values()) / total) if total else 0.0,
+        "dedup_hits": fl["dedup_hits"],
+        "dedup_rate": dedup_rate,
+        "plan_cache": stats["plans"],
+        "qps": len(all_lat) / max(run["wall_s"], 1e-9),
+    }
+    emit(f"serving_{sessions}_sessions_p50", out["p50_ms"] * 1e3,
+         f"p99_ms={out['p99_ms']:.2f}")
+    emit(f"serving_{sessions}_sessions_fairness", 0.0,
+         f"jain={out['jain_completed']:.4f} dedup_rate={dedup_rate:.3f} "
+         f"shed_rate={out['shed_rate']:.3f} qps={out['qps']:.0f}")
+    return out
+
+
+def _isolation_leg(sessions: int, queries_per_session: int,
+                   partitions: int, rows: int, workers: int) -> Dict:
+    """Steady tenants' p99 with vs without a greedy over-quota tenant."""
+    from repro.serving import TenantConfig
+
+    def steady_p99(with_greedy: bool):
+        cv = _build(partitions, rows)
+        tenants = [TenantConfig(t, max_queue=4096) for t in EQUAL_TENANTS]
+        if with_greedy:
+            # quota covers ~one partition per second: nearly every
+            # submission sheds at admission
+            tenants.append(TenantConfig("greedy", max_queue=4096,
+                                        byte_quota_per_s=float(rows * 16),
+                                        byte_burst=float(rows * 16)))
+        svc = cv.serving(tenants, workers=workers, use_kernels=False)
+        try:
+            run = _drive(svc, sessions, queries_per_session,
+                         greedy="greedy" if with_greedy else None, seed=77)
+            summary = svc.stats()["tenants"]
+        finally:
+            svc.close()
+        steady = [x for t in EQUAL_TENANTS for x in run["lat"][t]]
+        return _pct(steady, 99) * 1e3, run, summary
+
+    base_p99, _, _ = steady_p99(with_greedy=False)
+    noisy_p99, run, summary = steady_p99(with_greedy=True)
+    greedy_shed = run["shed"]["greedy"]
+    greedy_total = greedy_shed + len(run["lat"]["greedy"])
+    out = {
+        "sessions": sessions,
+        "steady_p99_ms_baseline": base_p99,
+        "steady_p99_ms_with_greedy": noisy_p99,
+        "p99_ratio": noisy_p99 / max(base_p99, 1e-9),
+        "greedy_shed": greedy_shed,
+        "greedy_shed_rate": greedy_shed / max(greedy_total, 1),
+        "greedy_summary": summary.get("greedy", {}).get("shed", {}),
+    }
+    emit("serving_isolation", 0.0,
+         f"steady_p99 {base_p99:.2f}ms -> {noisy_p99:.2f}ms "
+         f"(x{out['p99_ratio']:.2f}) greedy_shed={greedy_shed}")
+    return out
+
+
+def run(levels=(10, 100, 1000), partitions: int = 16, rows: int = 1024,
+        workers: int = 8, strict: bool = True) -> Dict:
+    results: Dict = {"levels": [], "isolation": None}
+    for sessions in levels:
+        # scale per-session depth down as concurrency scales up, so
+        # total offered load stays bench-sized at every level
+        qps_depth = max(1, 4000 // max(sessions, 1) // 4)
+        results["levels"].append(
+            _level(sessions, qps_depth, partitions, rows, workers))
+    iso_sessions = levels[len(levels) // 2]
+    results["isolation"] = _isolation_leg(
+        iso_sessions, max(1, 2000 // iso_sessions // 4),
+        partitions, rows, workers)
+
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    path = out / "BENCH_serving.json"
+    path.write_text(json.dumps(results, indent=2))
+    emit("serving_bench_json", 0.0, str(path))
+
+    # acceptance: equal-quota tenants are served fairly, in-flight
+    # identical fragments are shared, and an over-quota tenant sheds
+    # without smearing the steady tenants' tail
+    for lvl in results["levels"]:
+        if lvl["jain_completed"] < 0.9:
+            raise AssertionError(
+                f"Jain index {lvl['jain_completed']:.3f} < 0.9 at "
+                f"{lvl['sessions']} sessions")
+    if strict and not any(lvl["dedup_rate"] > 0
+                          for lvl in results["levels"]):
+        # needs enough concurrent identical queries to overlap in
+        # flight — quick/CI loads are too small to guarantee it
+        raise AssertionError("no cross-query fragment dedup at any level")
+    iso = results["isolation"]
+    if iso["greedy_shed"] <= 0:
+        raise AssertionError("greedy tenant was never shed")
+    if iso["p99_ratio"] > 3.0:
+        raise AssertionError(
+            f"greedy tenant moved steady p99 by x{iso['p99_ratio']:.2f}")
+    return results

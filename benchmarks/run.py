@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
                                              streams|clovis|percipience|
-                                             analytics|streaming|cluster]
+                                             analytics|streaming|cluster|
+                                             serving]
                                             [--quick]
 """
 from __future__ import annotations
@@ -26,7 +27,8 @@ def main() -> None:
 
     from benchmarks import (bench_analytics, bench_checkpoint, bench_clovis,
                             bench_cluster, bench_dht, bench_percipience,
-                            bench_stream_windows, bench_streams)
+                            bench_serving, bench_stream_windows,
+                            bench_streams)
 
     suites = {
         # paper Fig. 3: STREAM bandwidth, memory vs storage windows
@@ -62,6 +64,13 @@ def main() -> None:
             partitions=96 if args.quick else 128,
             rows=512 if args.quick else 2048,
             repeats=2 if args.quick else 3),
+        # serving front door: multi-tenant zipfian load at 10/100/1000
+        # sessions — tail latency, Jain fairness, shed + dedup rates
+        "serving": lambda: bench_serving.run(
+            levels=(10, 50) if args.quick else (10, 100, 1000),
+            partitions=8 if args.quick else 16,
+            rows=512 if args.quick else 1024,
+            strict=not args.quick),
     }
     if args.only is not None and args.only not in suites:
         ap.error(f"unknown benchmark {args.only!r} for --only; known "

@@ -151,21 +151,32 @@ class StatsCatalog:
         (``{STATS_KEY}: summary`` alongside the partial);
       * ``analyze(clovis, container)`` — eager scan (internal reads: no
         heat/access pollution) for benchmarks and warm starts.
+
+    ``version`` is a monotonic change counter bumped on every observe /
+    invalidate / feedback fold — anything caching decisions derived from
+    the catalog (the serving plan cache) keys on it and re-derives when
+    it moves.
     """
 
-    def __init__(self, max_partitions: int = 8192):
+    def __init__(self, max_partitions: int = 8192,
+                 max_sel_obs: int = 4096):
         self.max_partitions = max_partitions
+        self.max_sel_obs = max_sel_obs
+        self.version = 0              # bumped (under _lock) on any change
         self._stats: Dict[str, PartitionStats] = {}
         self._node_obs: Dict[str, Dict[str, float]] = {}
+        # (frag_key, oid) -> EWMA of actually-observed selectivity
+        self._sel_obs: Dict[Any, float] = {}
         self._store = None
         self._lock = threading.Lock()
 
     # -- feeds ---------------------------------------------------------
 
     def attach(self, store) -> "StatsCatalog":
-        if store is self._store:
-            return self
-        self._store = store
+        with self._lock:
+            if store is self._store:
+                return self
+            self._store = store
         store.register_write_hook(self._on_write)
         store.fdmi_register(self._on_fdmi)
         return self
@@ -174,11 +185,12 @@ class StatsCatalog:
         """Unhook from the store (engines that default-created their
         catalog call this on close so short-lived engines don't leave
         hooks behind on a long-lived store)."""
-        if self._store is None:
+        with self._lock:
+            store, self._store = self._store, None
+        if store is None:
             return
-        self._store.unregister_write_hook(self._on_write)
-        self._store.fdmi_unregister(self._on_fdmi)
-        self._store = None
+        store.unregister_write_hook(self._on_write)
+        store.fdmi_unregister(self._on_fdmi)
 
     def attach_shipper(self, shipper) -> "StatsCatalog":
         shipper.add_observer(self._on_ship)
@@ -190,22 +202,28 @@ class StatsCatalog:
     def _on_fdmi(self, event: str, oid: str, info: Dict):
         if event == "delete":
             self.invalidate(oid)
-        elif event == "migrate" and self._store is not None:
+        elif event == "migrate":
             # migration moves bytes, not content: re-stamp the stored
             # version so stats survive HSM tier changes
             with self._lock:
-                st = self._stats.get(oid)
-            if st is None:
+                store = self._store
+            if store is None:
                 return
             try:
-                version = self._store.meta(oid).version
+                version = store.meta(oid).version
             except KeyError:
                 return
+            # re-read and replace in ONE critical section: a concurrent
+            # invalidate-then-observe must not be clobbered by a stale
+            # re-stamp (the entry is skipped if it already carries the
+            # live version)
             with self._lock:
-                if oid in self._stats:
+                st = self._stats.get(oid)
+                if st is not None and st.version != version:
                     self._stats[oid] = PartitionStats(
                         st.oid, version, st.rows, st.ncols, st.nbytes,
                         st.cols)
+                    self.version += 1
 
     def _on_ship(self, res):
         """FunctionShipper observer: harvest piggybacked summaries,
@@ -229,10 +247,48 @@ class StatsCatalog:
                 # miss only costs one always-push partition
                 self._stats.pop(next(iter(self._stats)))
             self._stats[oid] = st
+            self.version += 1
 
     def invalidate(self, oid: str):
         with self._lock:
-            self._stats.pop(oid, None)
+            dropped = self._stats.pop(oid, None) is not None
+            stale = [k for k in self._sel_obs if k[1] == oid]
+            for k in stale:
+                del self._sel_obs[k]
+            if dropped or stale:
+                self.version += 1
+
+    # -- observed-selectivity feedback (estimate correction) -----------
+
+    def observe_selectivity(self, frag_key: str, oid: str, actual: float,
+                            alpha: float = 0.5):
+        """Fold the selectivity a shipped fragment *actually* delivered
+        (rows out / rows in) into an EWMA keyed by (fragment, object).
+        The cost model prefers this over the uniform-range estimate for
+        repeats of the same fragment — mis-estimates self-correct from
+        real executions instead of compounding (ROADMAP's observed-
+        feedback item, scoped to the per-fragment selectivity the
+        ship-vs-fetch decision hinges on)."""
+        actual = float(min(max(actual, 0.0), 1.0))
+        key = (frag_key, oid)
+        with self._lock:
+            prev = self._sel_obs.get(key)
+            if prev is None:
+                if len(self._sel_obs) >= self.max_sel_obs:
+                    self._sel_obs.pop(next(iter(self._sel_obs)))
+                self._sel_obs[key] = actual
+                self.version += 1
+            else:
+                self._sel_obs[key] = prev + alpha * (actual - prev)
+                # re-observing a stable selectivity must not thrash
+                # version-keyed plan caches: bump only on material drift
+                if abs(self._sel_obs[key] - prev) > 0.02:
+                    self.version += 1
+
+    def observed_selectivity(self, frag_key: str, oid: str
+                             ) -> Optional[float]:
+        with self._lock:
+            return self._sel_obs.get((frag_key, oid))
 
     def get(self, oid: str) -> Optional[PartitionStats]:
         """Fresh stats for ``oid`` or None (missing or stale)."""
@@ -287,10 +343,16 @@ class StatsCatalog:
             obs = self._node_obs.setdefault(
                 node, {"read_bw": bw, "samples": 0.0, "bytes": 0.0,
                        "wall_s": 0.0})
+            prev_bw = obs["read_bw"]
             obs["read_bw"] += alpha * (bw - obs["read_bw"])
             obs["samples"] += 1
             obs["bytes"] += nbytes
             obs["wall_s"] += wall_s
+            # only a *material* bandwidth shift (>10%) invalidates
+            # version-keyed plan caches — every ship nudges the EWMA,
+            # and bumping per ship would make cached plans unhittable
+            if abs(obs["read_bw"] - prev_bw) > 0.1 * max(prev_bw, 1e-9):
+                self.version += 1
 
     def node_read_bw(self, node: str) -> Optional[float]:
         """Learned effective scan bandwidth of a node (bytes/s), or
@@ -500,7 +562,8 @@ class CostModel:
 
     def decide(self, frag_spec: Sequence[Dict], *,
                stats: Optional[PartitionStats], size: int,
-               tier: Optional[TierParams], load: float = 0.0) -> Decision:
+               tier: Optional[TierParams], load: float = 0.0,
+               observed_sel: Optional[float] = None) -> Decision:
         net, comp = self.net, self.compute
         scan_s = tier.read_s(size) if tier else size / 1e9
         store_bps = comp.store_bps / (1.0 + comp.contention_beta
@@ -513,16 +576,25 @@ class CostModel:
                             "cold start: no partition stats, "
                             "defaulting to pushdown")
         est = estimate_fragment(frag_spec, stats)
-        out = min(est.out_bytes, max(size, 1))
+        sel, how = est.selectivity, "sel"
+        if observed_sel is not None:
+            # an actually-observed selectivity for this exact fragment
+            # beats the uniform-range estimate: rescale the predicted
+            # partial size by observed/estimated
+            sel, how = observed_sel, "obs_sel"
+            scale = observed_sel / max(est.selectivity, 1e-9)
+            out = min(int(est.out_bytes * min(scale, 1e6)), max(size, 1))
+        else:
+            out = min(est.out_bytes, max(size, 1))
         ship_s = scan_s + size / store_bps + net.latency_s + out / net.bw
         if ship_s <= fetch_s:
             return Decision(
-                SHIP, ship_s, fetch_s, out, est.selectivity,
-                f"sel={est.selectivity:.3f} est_out={out}B: "
+                SHIP, ship_s, fetch_s, out, sel,
+                f"{how}={sel:.3f} est_out={out}B: "
                 "partial is cheaper to move than raw bytes")
         return Decision(
-            FETCH, ship_s, fetch_s, size, est.selectivity,
-            f"sel={est.selectivity:.3f} est_out={out}B: pushdown "
+            FETCH, ship_s, fetch_s, size, sel,
+            f"{how}={sel:.3f} est_out={out}B: pushdown "
             "pointless, raw bytes cross either way and caller computes "
             "faster")
 
@@ -576,9 +648,12 @@ class CostContext:
                                     "object meta unavailable")
                 continue
             stats = self.catalog.get(oid) if self.catalog else None
+            obs_sel = (self.catalog.observed_selectivity(frag_key, oid)
+                       if self.catalog else None)
             out[oid] = self.model.decide(plan.frag_spec, stats=stats,
                                          size=size, tier=tier,
-                                         load=self.load.get(oid, 0.0))
+                                         load=self.load.get(oid, 0.0),
+                                         observed_sel=obs_sel)
         return out
 
 

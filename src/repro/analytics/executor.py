@@ -80,6 +80,11 @@ class QueryStats:
     query_tag: str = ""             # ADDB decision-trace key (plan_trace)
     plan: str = ""
     wall_s: float = 0.0
+    plan_s: float = 0.0             # optimizer/placement time
+    exec_s: float = 0.0             # partition execution time
+    merge_s: float = 0.0            # caller-side partial merge time
+    dedup_hits: int = 0             # fragments shared with an in-flight
+                                    # identical query (serving engines)
 
 
 @dataclass
@@ -266,6 +271,28 @@ class AnalyticsEngine:
             while len(self._partial_cache) > self._partial_cache_size:
                 self._partial_cache.popitem(last=False)
 
+    # -- fragment shipping hook (serving engines override) -------------
+
+    def _ship_fragment(self, name: str, frag_key: str, oid: str,
+                       stats: Optional[QueryStats] = None):
+        """Ship one compiled fragment at one object.  The serving mixin
+        overrides this with cross-query single-flight dedup; the base
+        engine just ships."""
+        return self.shipper.ship(name, oid)
+
+    def _observe_selectivity(self, frag_key: str, oid: str, partial):
+        """Feed the selectivity a shipped fragment actually delivered
+        back into the stats catalog (rows-shaped partials only — the
+        row count is the signal the ship-vs-fetch estimate hinges on)."""
+        if not (isinstance(partial, tuple) and len(partial) == 2
+                and partial[0] == "rows"):
+            return
+        st = self.stats.get(oid)
+        if st is None or st.rows <= 0:
+            return
+        rows_out = np.asarray(partial[1]).shape[0]
+        self.stats.observe_selectivity(frag_key, oid, rows_out / st.rows)
+
     # ------------------------------------------------------------------
     # execution
     # ------------------------------------------------------------------
@@ -290,9 +317,14 @@ class AnalyticsEngine:
             oids = self._schedule(
                 self.clovis.container(ds.source.container))
             plan = self._make_plan(ds, oids)
+            stats.plan_s = time.perf_counter() - t0
             stats.plan = plan.describe()
+            t1 = time.perf_counter()
             partials = self._run_container(ds, plan, oids, stats)
+            stats.exec_s = time.perf_counter() - t1
+            t2 = time.perf_counter()
             value = merge_partials(plan, partials, self.kcfg)
+            stats.merge_s = time.perf_counter() - t2
         stats.wall_s = time.perf_counter() - t0
         return QueryResult(value, stats)
 
@@ -395,7 +427,7 @@ class AnalyticsEngine:
                 name = frag_name
                 if self.cost_based and not self.stats.fresh(oid):
                     name = frag_stats_name   # piggyback a stats refresh
-                res = self.shipper.ship(name, oid)
+                res = self._ship_fragment(name, frag_key, oid, stats)
                 if not res.ok:
                     with lock:
                         errors.append(f"{oid}: {res.error}")
@@ -405,6 +437,7 @@ class AnalyticsEngine:
                 if isinstance(partial, dict) and STATS_KEY in partial:
                     partial = partial["partial"]
                 self._cache_put(frag_key, oid, partial, res.version)
+                self._observe_selectivity(frag_key, oid, partial)
                 if plan.local_ops:
                     # the fragment never aggregates when a caller tail
                     # exists, so its output is always rows

@@ -110,12 +110,13 @@ def op_from_spec(spec: Dict) -> Op:
     if kind == "key_by":
         return KeyBy(from_spec(spec["key"]))
     if kind == "window":
-        return Window(spec["size"], spec["slide"])
+        return Window(spec["size"], spec.get("slide"))
     if kind == "aggregate":
-        v = spec["value"]
-        vrange = spec["vrange"]
+        # optional keys may be omitted on the wire (serving front door)
+        v = spec.get("value")
+        vrange = spec.get("vrange")
         return Aggregate(spec["agg"], None if v is None else from_spec(v),
-                         spec["bins"],
+                         spec.get("bins", 32),
                          None if vrange is None else tuple(vrange))
     raise ValueError(f"bad op spec {spec!r}")
 

@@ -568,11 +568,14 @@ class ClusterClovis:
             return base
         return dataclasses.replace(base, read_bw=observed)
 
-    def analytics(self, **kw) -> "ClusterAnalyticsEngine":
+    def analytics(self, *, engine_cls=None,
+                  **kw) -> "ClusterAnalyticsEngine":
         """Cluster analytics engine: the standard AnalyticsEngine over
         the ClusterStore facade and the routed ClusterShipper, with
         per-partition node-aware cost planning.  All engines share one
-        StatsCatalog (pass ``stats=`` to override)."""
+        StatsCatalog (pass ``stats=`` to override).  ``engine_cls``
+        swaps in a ClusterAnalyticsEngine subclass (the serving front
+        door uses it)."""
         from repro.analytics import StatsCatalog
         if "stats" not in kw:
             with self._lock:
@@ -582,7 +585,16 @@ class ClusterClovis:
             kw["stats"] = self._stats_catalog
         kw.setdefault("shipper", self.shipper)
         kw.setdefault("max_workers", 4 * max(len(self.ring), 1))
-        return ClusterAnalyticsEngine(self, **kw)
+        cls = engine_cls or ClusterAnalyticsEngine
+        return cls(self, **kw)
+
+    def serving(self, tenants=(), **kw) -> "QueryService":
+        """Multi-tenant serving front door over the cluster: the same
+        QueryService as ``Clovis.serving`` but executing through the
+        routed ClusterShipper with node-aware cost planning and
+        replica failover (see docs/serving.md)."""
+        from repro.serving import QueryService
+        return QueryService(self, tenants, **kw)
 
     # ------------------------------------------------------------------
 

@@ -193,6 +193,35 @@ class Addb:
                         "emit_latency_s": r.latency_s})
         return out
 
+    # ---- serving front-door trace ----
+
+    def record_serving(self, query: str, stage: str, tenant: str,
+                       nbytes: int = 0, latency_s: float = 0.0,
+                       ok: bool = True):
+        """Record one stage of a front-door query's lifecycle (op
+        ``serving``): ``stage`` is admit | queue | plan | execute |
+        merge | done | shed, ``tenant`` the charged tenant, ``nbytes``
+        the stage's bytes (estimate at admit, moved at execute, actual
+        scanned at done).  The per-stage trace is what makes a p99
+        attributable: queue time vs plan time vs store time read
+        straight out of ADDB (docs/serving.md)."""
+        self.record("serving", f"{query}:{stage}", tenant,
+                    int(nbytes), float(latency_s), ok)
+
+    def serving_trace(self, query: Optional[str] = None) -> List[Dict]:
+        """Serving-stage records as dicts (optionally for one query
+        tag), oldest first: {query, stage, tenant, nbytes, latency_s,
+        ok}."""
+        out: List[Dict] = []
+        for r in self.records("serving"):
+            q, _, stage = r.entity.rpartition(":")
+            if query is not None and q != query:
+                continue
+            out.append({"query": q, "stage": stage, "tenant": r.device,
+                        "nbytes": r.nbytes, "latency_s": r.latency_s,
+                        "ok": r.ok})
+        return out
+
     # ---- aggregations (ARM-Forge-style performance report) ----
 
     def device_latency_percentile(self, pct: float = 0.99

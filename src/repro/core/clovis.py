@@ -246,20 +246,32 @@ class Clovis:
         self.percipience = attach_percipience(self, **kw)
         return self.percipience
 
-    def analytics(self, **kw) -> "AnalyticsEngine":
+    def analytics(self, *, engine_cls=None, **kw) -> "AnalyticsEngine":
         """Entry point to the percipient analytics engine — declarative
         pushdown dataflow queries over containers and streams (see
         repro.analytics and docs/analytics.md).  All engines created
         through this facade share one StatsCatalog, so selectivity
         statistics harvested by one query benefit every later one
-        (pass ``stats=`` to override)."""
+        (pass ``stats=`` to override).  ``engine_cls`` swaps in an
+        AnalyticsEngine subclass (the serving front door uses it)."""
         from repro.analytics import AnalyticsEngine, StatsCatalog
         if "stats" not in kw:
             with self._lock:
                 if self._stats_catalog is None:
                     self._stats_catalog = StatsCatalog().attach(self.store)
             kw["stats"] = self._stats_catalog
-        return AnalyticsEngine(self, **kw)
+        cls = engine_cls or AnalyticsEngine
+        return cls(self, **kw)
+
+    def serving(self, tenants=(), **kw) -> "QueryService":
+        """Entry point to the multi-tenant query serving front door —
+        admission-controlled, weighted-fair, fragment-deduplicating
+        query service over this store (see repro.serving and
+        docs/serving.md).  ``tenants`` is an iterable of TenantConfig;
+        keywords pass through to QueryService (``workers``,
+        ``quantum_bytes``, plus engine options)."""
+        from repro.serving import QueryService
+        return QueryService(self, tenants, **kw)
 
 
 def _dtype_name(dt) -> str:
