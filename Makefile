@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench bench-percipience bench-analytics bench-streaming \
-        bench-dht bench-cluster bench-serving docs-check
+        bench-dht bench-cluster bench-edge bench-serving docs-check
 
 # tier-1 verify (ROADMAP.md); CI adds PYTEST_EXTRA="--timeout=120"
 # (pytest-timeout is in requirements-dev, not assumed locally)
@@ -32,6 +32,11 @@ bench-dht:
 
 bench-cluster:
 	$(PYTHON) -m benchmarks.run --only cluster --quick
+
+# chaos gauntlet: duplicates + reorders + crash/replay + poison, with
+# the exactly-once byte-identity assertion (writes results/BENCH_edge.json)
+bench-edge:
+	$(PYTHON) -m benchmarks.run --only edge
 
 # full-size on purpose: acceptance needs the 10/100/1000-session levels
 bench-serving:

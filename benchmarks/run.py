@@ -5,7 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
                                              streams|clovis|percipience|
                                              analytics|streaming|cluster|
-                                             serving]
+                                             edge|serving]
                                             [--quick]
 """
 from __future__ import annotations
@@ -26,9 +26,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_analytics, bench_checkpoint, bench_clovis,
-                            bench_cluster, bench_dht, bench_percipience,
-                            bench_serving, bench_stream_windows,
-                            bench_streams)
+                            bench_cluster, bench_dht, bench_edge,
+                            bench_percipience, bench_serving,
+                            bench_stream_windows, bench_streams)
 
     suites = {
         # paper Fig. 3: STREAM bandwidth, memory vs storage windows
@@ -64,6 +64,12 @@ def main() -> None:
             partitions=96 if args.quick else 128,
             rows=512 if args.quick else 2048,
             repeats=2 if args.quick else 3),
+        # resilient edge ingestion: seeded chaos gauntlet (duplicates,
+        # reorders, poison, producer crash+replay, torn tails) with the
+        # exactly-once byte-identity assertion
+        "edge": lambda: bench_edge.run(
+            n_events=400 if args.quick else 1200,
+            producers=2 if args.quick else 4),
         # serving front door: multi-tenant zipfian load at 10/100/1000
         # sessions — tail latency, Jain fairness, shed + dedup rates
         "serving": lambda: bench_serving.run(

@@ -39,4 +39,5 @@ from repro.analytics.kernels import (histogram, histogram_ref,  # noqa: F401
                                      window_reduce, window_reduce_ref)
 from repro.analytics.streaming import (ContinuousQuery,  # noqa: F401
                                        EventWindow, LateElement,
-                                       WatermarkTracker, WindowResult)
+                                       SessionWindow, WatermarkTracker,
+                                       WindowResult)

@@ -328,16 +328,20 @@ class AnalyticsEngine:
         stats.wall_s = time.perf_counter() - t0
         return QueryResult(value, stats)
 
-    def run_continuous(self, ds: Dataset, window: EventWindow,
+    def run_continuous(self, ds: Dataset, window,
                        **kw) -> ContinuousQuery:
         """Execute a live-stream dataset as a continuous query:
         incremental watermarked event-time windows emitting results
         while the stream is still live (docs/streaming.md).
 
-        ``window`` is the EventWindow spec (size / slide / allowed
-        lateness); remaining keywords pass through to ContinuousQuery
-        (``on_result`` callback, ``max_results`` bounded queue size,
-        ``delta_rows`` incremental batch size, ``idle_timeout_s``).
+        ``window`` is the window spec — an ``EventWindow`` (tumbling /
+        sliding, size / slide / allowed lateness) or a ``SessionWindow``
+        (gap windows whose extents are data-defined); remaining
+        keywords pass through to ContinuousQuery (``on_result``
+        callback, ``max_results`` bounded queue size, ``delta_rows``
+        incremental batch size, ``idle_timeout_s``, and
+        ``retraction=True`` for speculative emit + late-data
+        re-emission on fixed windows).
         Closed-window partials combine through the FunctionShipper
         partial-aggregate registry (scalars) and ``merge_partials``
         (grouped) — the exact merge code batch queries use, so the two

@@ -102,6 +102,30 @@ class EventWindow:
         return k * self.stride + self.size_s
 
 
+@dataclass(frozen=True)
+class SessionWindow:
+    """Session (gap) windows: a window is a burst of activity separated
+    from the next by at least ``gap_s`` of event-time silence — the
+    natural windowing for instrument runs and experiment shots, whose
+    extents are data-defined rather than clock-defined.
+
+    An element at event time ``t`` spans ``[t, t + gap_s)``; sessions
+    that overlap merge (so one straggler can weld two bursts into one —
+    exactly the Dataflow session semantics).  A session closes when the
+    watermark passes its end (last event time + gap) plus the allowed
+    lateness.  Sessions always emit final results; speculative
+    retraction mode is a fixed-window feature (merging would retract
+    *other* sessions' identities, not just values)."""
+    gap_s: float
+    allowed_lateness_s: float = 0.0
+
+    def __post_init__(self):
+        if self.gap_s <= 0:
+            raise ValueError("session gap_s must be positive")
+        if self.allowed_lateness_s < 0:
+            raise ValueError("allowed_lateness_s cannot be negative")
+
+
 # ---------------------------------------------------------------------------
 # watermarks
 # ---------------------------------------------------------------------------
@@ -172,17 +196,27 @@ class WatermarkTracker:
 
 @dataclass(frozen=True)
 class WindowResult:
-    """One closed window: ``value`` is a scalar (global aggregate) or a
+    """One emitted window: ``value`` is a scalar (global aggregate) or a
     ``(keys, values)`` pair (grouped), exactly what the batch engine
     would return for the same rows.  ``emit_latency_s`` is emit wall
     time minus the wall time the watermark crossed the window's close
-    threshold (the ADDB-recorded percipience signal)."""
+    threshold (the ADDB-recorded percipience signal).
+
+    With speculative ``retraction`` mode enabled, a window may emit
+    more than once: ``final=False`` results are provisional (emitted
+    once the watermark passes the window *end*, revised whenever late
+    data lands within the allowed lateness), and a higher ``revision``
+    for the same ``(stream_id, start, end)`` retracts every lower one.
+    The ``final=True`` emission is the committed value — byte-identical
+    to batch recomputation, exactly as in final-only mode."""
     stream_id: str
     start: float
     end: float
     value: Any
     rows: int
     emit_latency_s: float
+    final: bool = True
+    revision: int = 0
 
 
 @dataclass(frozen=True)
@@ -204,6 +238,18 @@ class _OpenWindow:
     pending: List[np.ndarray] = field(default_factory=list)
     partials: List[Any] = field(default_factory=list)
     rows: int = 0                    # post-row-ops rows aggregated
+    revision: int = -1               # last provisional revision emitted
+    dirty: bool = False              # data arrived since that emission
+
+
+@dataclass
+class _OpenSession:
+    """One open session window: ``lo`` is the earliest event time seen,
+    ``hi`` the latest plus the gap (the session's provisional end —
+    it extends as activity continues and jumps when sessions merge)."""
+    lo: float
+    hi: float
+    win: _OpenWindow = field(default_factory=_OpenWindow)
 
 
 # ---------------------------------------------------------------------------
@@ -219,18 +265,26 @@ class ContinuousQuery:
     ``late``/``late_count``; ``close()`` seals the watermark, emits
     every still-open window, and returns the drained results."""
 
-    def __init__(self, ctx, splan: StreamingPlan, window: EventWindow, *,
+    def __init__(self, ctx, splan: StreamingPlan, window, *,
                  shipper, kcfg: Optional[KernelCfg] = None, addb=None,
                  tag: str = "cq",
                  on_result: Optional[Callable[[WindowResult], None]] = None,
                  max_results: int = 1024, delta_rows: int = 256,
                  idle_timeout_s: Optional[float] = None,
-                 late_capacity: int = 1024):
+                 late_capacity: int = 1024, retraction: bool = False):
         if delta_rows <= 0:
             raise ValueError("delta_rows must be positive")
+        if not isinstance(window, (EventWindow, SessionWindow)):
+            raise TypeError("window must be an EventWindow or a "
+                            "SessionWindow")
+        if retraction and isinstance(window, SessionWindow):
+            raise ValueError("retraction (speculative emission) is a "
+                             "fixed-window feature; session windows "
+                             "emit final results only")
         self._ctx = ctx
         self._splan = splan
         self._window = window
+        self._retraction = retraction
         self._kcfg = kcfg or KernelCfg()
         self._addb = addb
         self.tag = tag
@@ -244,6 +298,7 @@ class ContinuousQuery:
         self._gplan = PhysicalPlan([], [], "group", splan.agg.agg)
         self._delta_rows = delta_rows
         self._open: Dict[Tuple[str, int], _OpenWindow] = {}
+        self._sessions: Dict[str, List[_OpenSession]] = {}
         self._results: "queue.Queue[WindowResult]" = \
             queue.Queue(maxsize=max_results)
         self.late: Deque[LateElement] = deque(maxlen=late_capacity)
@@ -252,7 +307,9 @@ class ContinuousQuery:
         self._counts = {"windows_opened": 0, "windows_closed": 0,
                         "emitted": 0, "late_count": 0, "elements": 0,
                         "dropped_results": 0, "callback_errors": 0,
-                        "peak_open_windows": 0, "peak_buffered_rows": 0}
+                        "peak_open_windows": 0, "peak_buffered_rows": 0,
+                        "session_merges": 0, "provisional_emits": 0,
+                        "retractions": 0}
         self._buffered = 0
         self._advanced_wm = _NEG_INF     # last watermark _advance acted on
         self._wm = WatermarkTracker(ctx.n_producers)
@@ -268,27 +325,11 @@ class ContinuousQuery:
                 return
             self._counts["elements"] += 1
             wm = self._wm.watermark(self._idle_timeout_s)
-            lateness = self._window.allowed_lateness_s
-            missed, assigned = 0, False
             row = np.atleast_1d(np.asarray(el.payload))
-            for k in self._window.keys_for(ets):
-                if wm >= self._window.end(k) + lateness:
-                    missed += 1          # watermark-closed before arrival
-                    continue
-                key = (el.stream_id, k)
-                w = self._open.get(key)
-                if w is None:
-                    w = self._open[key] = _OpenWindow()
-                    self._counts["windows_opened"] += 1
-                    self._counts["peak_open_windows"] = max(
-                        self._counts["peak_open_windows"], len(self._open))
-                w.pending.append(row)
-                self._buffered += 1
-                self._counts["peak_buffered_rows"] = max(
-                    self._counts["peak_buffered_rows"], self._buffered)
-                if len(w.pending) >= self._delta_rows:
-                    self._flush_delta(w)
-                assigned = True
+            if isinstance(self._window, SessionWindow):
+                missed, assigned = self._assign_session(el, ets, row, wm)
+            else:
+                missed, assigned = self._assign_fixed(el, ets, row, wm)
             if missed:
                 self._counts["late_count"] += 1
                 self.late.append(LateElement(el.stream_id, el.seq, ets,
@@ -298,6 +339,74 @@ class ContinuousQuery:
                 emitted = self._advance(
                     self._wm.watermark(self._idle_timeout_s))
         self._deliver(emitted)
+
+    def _buffer_row(self, w: _OpenWindow, row: np.ndarray):
+        w.pending.append(row)
+        w.dirty = True
+        self._buffered += 1
+        self._counts["peak_buffered_rows"] = max(
+            self._counts["peak_buffered_rows"], self._buffered)
+        if len(w.pending) >= self._delta_rows:
+            self._flush_delta(w)
+
+    def _n_open(self) -> int:
+        return len(self._open) + sum(len(s) for s in
+                                     self._sessions.values())
+
+    def _assign_fixed(self, el, ets: float, row: np.ndarray,
+                      wm: float) -> Tuple[int, bool]:
+        lateness = self._window.allowed_lateness_s
+        missed, assigned = 0, False
+        for k in self._window.keys_for(ets):
+            if wm >= self._window.end(k) + lateness:
+                missed += 1              # watermark-closed before arrival
+                continue
+            key = (el.stream_id, k)
+            w = self._open.get(key)
+            if w is None:
+                w = self._open[key] = _OpenWindow()
+                self._counts["windows_opened"] += 1
+                self._counts["peak_open_windows"] = max(
+                    self._counts["peak_open_windows"], self._n_open())
+            self._buffer_row(w, row)
+            assigned = True
+        return missed, assigned
+
+    def _assign_session(self, el, ets: float, row: np.ndarray,
+                        wm: float) -> Tuple[int, bool]:
+        """Join/extend/merge session windows for one element.  An open
+        overlapping session always absorbs the element (that is what
+        batch recomputation would do); only an element whose would-be
+        session ``[ets, ets + gap)`` is already past the watermark *and*
+        touches no open session is late."""
+        gap = self._window.gap_s
+        lateness = self._window.allowed_lateness_s
+        sessions = self._sessions.setdefault(el.stream_id, [])
+        # overlap of [ets, ets + gap) with open [lo, hi)
+        touching = [s for s in sessions
+                    if ets + gap > s.lo and ets < s.hi]
+        if not touching:
+            if wm >= ets + gap + lateness:
+                return 1, False          # its session already closed
+            s = _OpenSession(ets, ets + gap)
+            sessions.append(s)
+            self._counts["windows_opened"] += 1
+            self._counts["peak_open_windows"] = max(
+                self._counts["peak_open_windows"], self._n_open())
+        else:
+            s = touching[0]
+            s.lo = min(s.lo, ets)
+            s.hi = max(s.hi, ets + gap)
+            for other in touching[1:]:   # one straggler can weld bursts
+                s.lo = min(s.lo, other.lo)
+                s.hi = max(s.hi, other.hi)
+                self._flush_delta(other.win)
+                s.win.partials.extend(other.win.partials)
+                s.win.rows += other.win.rows
+                sessions.remove(other)
+                self._counts["session_merges"] += 1
+        self._buffer_row(s.win, row)
+        return 0, True
 
     def _flush_delta(self, w: _OpenWindow):
         """Fold the buffered delta into a partial: one vectorised pass
@@ -330,36 +439,90 @@ class ContinuousQuery:
         delivery *outside* the operator lock.  A watermark that has not
         moved since the last advance cannot close anything (elements
         are only assigned to windows the watermark has not passed), so
-        the open-window scan is skipped on the hot path."""
-        if wm == _NEG_INF or wm <= self._advanced_wm:
+        the open-window scan is skipped on the hot path — except in
+        retraction mode, where a stalled watermark can still owe
+        re-emissions for dirty provisional windows."""
+        if wm == _NEG_INF:
             return []
-        self._advanced_wm = wm
+        if wm <= self._advanced_wm and not self._retraction:
+            return []
+        if wm > self._advanced_wm:
+            self._advanced_wm = wm
+        if isinstance(self._window, SessionWindow):
+            return self._advance_sessions(wm)
         lateness = self._window.allowed_lateness_s
         due = [key for key in self._open
                if wm >= self._window.end(key[1]) + lateness]
-        if not due:
-            return []
         wm_wall = time.time()
-        return [self._close_window(key, wm_wall) for key in
-                sorted(due, key=lambda t: (self._window.end(t[1]), t[0]))]
+        out = [self._close_window(key, wm_wall) for key in
+               sorted(due, key=lambda t: (self._window.end(t[1]), t[0]))]
+        if self._retraction:
+            # speculative zone: end <= wm < end + lateness — emit a
+            # provisional result on entry, re-emit when late data made
+            # the previous emission stale (the retraction)
+            spec = [(key, w) for key, w in self._open.items()
+                    if wm >= self._window.end(key[1])
+                    and (w.revision < 0 or w.dirty)]
+            for key, w in sorted(spec, key=lambda t: (
+                    self._window.end(t[0][1]), t[0][0])):
+                out.append(self._emit_provisional(key, w, wm_wall))
+        return out
+
+    def _advance_sessions(self, wm: float) -> List[WindowResult]:
+        lateness = self._window.allowed_lateness_s
+        due: List[Tuple[str, _OpenSession]] = []
+        for sid, sess in self._sessions.items():
+            for s in list(sess):
+                if wm >= s.hi + lateness:
+                    sess.remove(s)
+                    due.append((sid, s))
+        wm_wall = time.time()
+        out = []
+        for sid, s in sorted(due, key=lambda t: (t[1].hi, t[0])):
+            out.append(self._finish(sid, s.lo, s.hi, s.win, wm_wall,
+                                    final=True))
+        return out
+
+    def _combine(self, w: _OpenWindow):
+        """Window value from accumulated partials, without consuming
+        them (provisional emissions re-combine after late deltas)."""
+        self._flush_delta(w)
+        if self._splan.merge == "group":
+            return merge_partials(self._gplan, list(w.partials), self._kcfg)
+        return self._pa.combine(list(w.partials)) if w.partials else None
+
+    def _finish(self, sid: str, start: float, end: float, w: _OpenWindow,
+                wm_wall: float, *, final: bool) -> WindowResult:
+        value = self._combine(w)
+        latency = time.time() - wm_wall
+        revision = w.revision + 1
+        w.revision = revision
+        w.dirty = False
+        if final:
+            self._counts["windows_closed"] += 1
+            if self._addb is not None:
+                self._addb.record_window(self.tag, sid, start, w.rows,
+                                         latency)
+        else:
+            self._counts["provisional_emits"] += 1
+            if revision > 0:
+                self._counts["retractions"] += 1
+        return WindowResult(sid, start, end, value, w.rows, latency,
+                            final=final,
+                            revision=revision if self._retraction else 0)
 
     def _close_window(self, key: Tuple[str, int],
                       wm_wall: float) -> WindowResult:
         sid, k = key
         w = self._open.pop(key)
-        self._flush_delta(w)
-        self._counts["windows_closed"] += 1
-        if self._splan.merge == "group":
-            value = merge_partials(self._gplan, w.partials, self._kcfg)
-        else:
-            value = (self._pa.combine(w.partials) if w.partials else None)
-        latency = time.time() - wm_wall
-        res = WindowResult(sid, self._window.start(k), self._window.end(k),
-                           value, w.rows, latency)
-        if self._addb is not None:
-            self._addb.record_window(self.tag, sid, res.start, w.rows,
-                                     latency)
-        return res
+        return self._finish(sid, self._window.start(k),
+                            self._window.end(k), w, wm_wall, final=True)
+
+    def _emit_provisional(self, key: Tuple[str, int], w: _OpenWindow,
+                          wm_wall: float) -> WindowResult:
+        sid, k = key
+        return self._finish(sid, self._window.start(k),
+                            self._window.end(k), w, wm_wall, final=False)
 
     def _deliver(self, results: List[WindowResult]):
         """Hand closed windows to the caller — callback or bounded
@@ -422,7 +585,7 @@ class ContinuousQuery:
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             out = dict(self._counts)
-            out["open_windows"] = len(self._open)
+            out["open_windows"] = self._n_open()
             out["buffered_rows"] = self._buffered
             out["watermark"] = self._wm.watermark(self._idle_timeout_s)
             out["closed"] = self._closed

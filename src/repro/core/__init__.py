@@ -28,7 +28,8 @@ from repro.core.layouts import Layout, DEFAULT_LAYOUTS  # noqa: F401
 from repro.core.object_store import ObjectStore  # noqa: F401
 from repro.core.storage_window import (MemoryWindow, StorageWindow,  # noqa: F401
                                        WindowAllocator)
-from repro.core.streams import (StreamContext, StreamTap,  # noqa: F401
+from repro.core.streams import (StreamBackpressureError,  # noqa: F401
+                                StreamContext, StreamTap,
                                 clovis_appender, tee)
 from repro.core.tiers import (DeviceModel, TierDevice, TierPool,  # noqa: F401
                               make_tier_pools)

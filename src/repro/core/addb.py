@@ -193,6 +193,32 @@ class Addb:
                         "emit_latency_s": r.latency_s})
         return out
 
+    # ---- edge-ingestion trace ----
+
+    def record_edge(self, kind: str, source: str, detail: str = "-",
+                    n: int = 0, latency_s: float = 0.0, ok: bool = True):
+        """Record one edge-ingestion event (op ``edge_ingest``):
+        ``kind`` is applied | duplicate | dlq | replay | backpressure |
+        prune, ``source`` the durable producer buffer it came from.
+        The dead-letter channel's poison-event count is *this* trace
+        filtered to ``kind="dlq"`` — undecodable instrument data is
+        routed and visible, never silently shed (docs/ingestion.md)."""
+        self.record("edge_ingest", f"{kind}:{source}", detail,
+                    int(n), float(latency_s), ok)
+
+    def edge_trace(self, kind: Optional[str] = None) -> List[Dict]:
+        """Edge-ingestion records as dicts (optionally one kind),
+        oldest first: {kind, source, detail, n, latency_s, ok}."""
+        out: List[Dict] = []
+        for r in self.records("edge_ingest"):
+            k, _, source = r.entity.partition(":")
+            if kind is not None and k != kind:
+                continue
+            out.append({"kind": k, "source": source, "detail": r.device,
+                        "n": r.nbytes, "latency_s": r.latency_s,
+                        "ok": r.ok})
+        return out
+
     # ---- serving front-door trace ----
 
     def record_serving(self, query: str, stage: str, tenant: str,

@@ -31,6 +31,28 @@ from typing import Any, Callable, Dict, List, Optional
 StreamFn = Callable[["StreamElement"], None]
 
 
+class StreamBackpressureError(RuntimeError):
+    """A producer's bounded queue could not admit an element.
+
+    Raised by ``StreamContext.push`` under the ``error`` drop policy (a
+    full queue rejects the element immediately) or under the default
+    ``block`` policy when a ``timeout`` was given and expired.  Carries
+    enough context to identify the misbehaving producer — resilient
+    edge ingestion (``repro.edge``) surfaces this instead of silently
+    losing data, so the caller can replay from its durable buffer."""
+
+    def __init__(self, producer: int, stream_id: str, depth: int,
+                 policy: str):
+        super().__init__(
+            f"producer {producer} backpressured on stream "
+            f"{stream_id!r}: queue of depth {depth} is full "
+            f"(policy={policy})")
+        self.producer = producer
+        self.stream_id = stream_id
+        self.depth = depth
+        self.policy = policy
+
+
 @dataclass(order=True)
 class StreamElement:
     """One record of the MPIStream flow (paper §4.2): what a producer
@@ -65,18 +87,21 @@ class StreamContext:
     applies the attached computation, decoupling step time from I/O.
 
     ``drop_policy``: ``"block"`` (backpressure, the default),
-    ``"drop"`` (reject the *new* element when the queue is full), or
+    ``"drop"`` (reject the *new* element when the queue is full),
     ``"drop_oldest"`` (evict the oldest queued element to admit the new
-    one — live telemetry wants the freshest data).  Dropped elements are
-    counted in ``stats["dropped"]`` either way."""
+    one — live telemetry wants the freshest data), or ``"error"``
+    (raise a typed ``StreamBackpressureError`` so a hostile producer is
+    *told*, not silently shed).  Dropped elements are counted in
+    ``stats["dropped"]`` either way; backpressure rejections
+    additionally in ``stats["backpressure_errors"]``."""
 
     def __init__(self, *, n_producers: int, consumer_ratio: int = 15,
                  queue_depth: int = 256, attach: Optional[StreamFn] = None,
                  drop_policy: str = "block"):
         """attach: the computation applied to every consumed element."""
-        if drop_policy not in ("block", "drop", "drop_oldest"):
+        if drop_policy not in ("block", "drop", "drop_oldest", "error"):
             raise ValueError("drop_policy must be block | drop | "
-                             "drop_oldest")
+                             "drop_oldest | error")
         self.n_producers = n_producers
         self.n_consumers = max(1, -(-n_producers // consumer_ratio))
         self.drop_policy = drop_policy
@@ -89,6 +114,7 @@ class StreamContext:
         self._dropped = 0
         self._produced = 0
         self._attach_errors = 0
+        self._bp_errors = 0
         self._lock = threading.Lock()
         self._subscribers: List[StreamFn] = []
         self._threads: List[threading.Thread] = []
@@ -101,33 +127,60 @@ class StreamContext:
     # ------------------------------------------------------------------
 
     def push(self, producer: int, stream_id: str, payload: Any,
-             *, event_ts: Optional[float] = None) -> bool:
+             *, event_ts: Optional[float] = None,
+             timeout: Optional[float] = None) -> bool:
         """Producer-side emit; returns False if the element was dropped
-        (``drop`` policy).  ``event_ts`` stamps event time for
-        watermarked continuous queries; producers should stamp
-        non-decreasing event times (out-of-order stragglers are absorbed
-        by the query's allowed lateness)."""
+        (``drop`` policy) and raises ``StreamBackpressureError`` under
+        the ``error`` policy (or when a ``block`` ``timeout`` expires).
+        ``event_ts`` stamps event time for watermarked continuous
+        queries; producers should stamp non-decreasing event times
+        (out-of-order stragglers are absorbed by the query's allowed
+        lateness).
+
+        Admission is lock-free against concurrent producers on the same
+        queue: non-blocking policies retry ``put_nowait`` instead of
+        trusting a ``full()`` snapshot, so a racing producer can never
+        convert ``drop``/``drop_oldest``/``error`` into an unbounded
+        block."""
         q = self._queues[producer]
         el = StreamElement(self._seq[producer], stream_id, payload,
                            event_ts=event_ts, producer=producer)
         self._seq[producer] += 1
         with self._lock:
             self._produced += 1
-        if q.full():
-            if self.drop_policy == "drop":
+        if self.drop_policy == "block":
+            try:
+                q.put(el, timeout=timeout)   # blocks on full (backpressure)
+            except queue.Full:
                 with self._lock:
                     self._dropped += 1
-                return False
-            if self.drop_policy == "drop_oldest":
-                try:
+                    self._bp_errors += 1
+                raise StreamBackpressureError(producer, stream_id,
+                                              q.maxsize, self.drop_policy)
+            return True
+        while True:
+            try:
+                q.put_nowait(el)
+                return True
+            except queue.Full:
+                if self.drop_policy == "drop":
+                    with self._lock:
+                        self._dropped += 1
+                    return False
+                if self.drop_policy == "error":
+                    with self._lock:
+                        self._dropped += 1
+                        self._bp_errors += 1
+                    raise StreamBackpressureError(producer, stream_id,
+                                                  q.maxsize,
+                                                  self.drop_policy)
+                try:                   # drop_oldest: evict, then retry
                     q.get_nowait()
                     q.task_done()      # keep unfinished_tasks accounting
                     with self._lock:
                         self._dropped += 1
                 except queue.Empty:
                     pass               # a consumer drained it first
-        q.put(el)          # blocks on full queue (backpressure)
-        return True
 
     def subscribe(self, fn: StreamFn) -> Callable[[], None]:
         """Register a consumer-side observer: ``fn(el)`` runs for every
@@ -215,6 +268,7 @@ class StreamContext:
             return {"produced": self._produced, "consumed": self._consumed,
                     "dropped": self._dropped, "pending": self._pending(),
                     "attach_errors": self._attach_errors,
+                    "backpressure_errors": self._bp_errors,
                     "consumers": self.n_consumers}
 
 

@@ -1,0 +1,273 @@
+"""Seeded deterministic chaos for the edge-ingestion pipeline.
+
+A chaos *schedule* is a plain list of action dataclasses generated from
+one integer seed (``make_schedule``) — the same seed always produces
+the same hostile producer behaviour, so a failing gauntlet run is
+replayable bit-for-bit.  The *harness* (``ChaosHarness``) executes a
+schedule against real ``EdgeIngestor``s feeding a real
+``StreamContext``:
+
+    Emit       append + deliver one event (``lost=True``: the producer
+               crashed between the durable append and the delivery —
+               the event exists only in the EdgeBuffer until a replay)
+    Duplicate  redeliver an already-delivered record (flaky network /
+               lost ack) — must come back as a counted duplicate
+    Poison     send undecodable bytes — must route to the dead-letter
+               channel, never into a window
+    Crash      producer process dies: the buffer file handle drops
+               (optionally mid-append, leaving a torn tail), in-memory
+               acks are gone, and a *new* EdgeBuffer + EdgeIngestor is
+               built over the same directory and replayed
+
+``harness.expected`` accumulates the ground truth (every emitted
+event's value, keyed by the composite ``producer*KEYSPAN + window``
+key) as the schedule runs; the gauntlet's invariant is that streaming
+window aggregates + unassigned-late accounting equal both the batch
+recomputation over the drained tap AND this ground truth, exactly.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Union
+
+import numpy as np
+
+from repro.edge import EdgeBuffer, EdgeIngestor, EdgeRecord, encode_array
+from repro.edge.ingest import DeadLetterQueue
+from repro.edge.ledger import IdempotencyLedger
+
+KEYSPAN = 10_000      # composite key: producer * KEYSPAN + window index
+
+# a doomed mid-append value — must NEVER appear in any aggregate
+TORN_SENTINEL = 987_654_321
+
+
+@dataclass(frozen=True)
+class Emit:
+    producer: int
+    event_ts: float
+    value: int
+    lost: bool = False          # appended durably but never delivered
+
+
+@dataclass(frozen=True)
+class Duplicate:
+    producer: int
+    pick: float                 # in [0, 1): which past delivery to repeat
+
+
+@dataclass(frozen=True)
+class Poison:
+    producer: int
+    event_ts: float
+
+
+@dataclass(frozen=True)
+class Crash:
+    producer: int
+    torn: bool = False          # died mid-append: torn tail on disk
+
+
+Action = Union[Emit, Duplicate, Poison, Crash]
+
+
+def make_schedule(seed: int, *, producers: int = 2, n_events: int = 150,
+                  window_s: float = 1.0, reorder_s: float = 0.4,
+                  dt: float = 0.05, p_lost: float = 0.06,
+                  p_dup: float = 0.10, p_poison: float = 0.05,
+                  n_crashes: int = 2) -> List[Action]:
+    """Deterministic hostile-producer schedule from one seed.
+
+    Event times advance ``dt`` per emit per producer with a bounded
+    backward jitter of at most ``reorder_s`` (out-of-order but within
+    a lateness budget >= reorder_s + dt; anything the merge still
+    closes on is absorbed by the late side channel's accounting).
+    ``n_crashes`` producer crashes (at least one, the last of them
+    torn) are spread over the middle of the schedule.
+    """
+    rng = random.Random(seed)
+    actions: List[Action] = []
+    steps = [0] * producers
+    for i in range(n_events):
+        p = rng.randrange(producers)
+        base = reorder_s + steps[p] * dt
+        steps[p] += 1
+        ets = base - rng.uniform(0.0, reorder_s)
+        roll = rng.random()
+        if roll < p_poison:
+            actions.append(Poison(p, ets))
+        elif roll < p_poison + p_dup:
+            actions.append(Duplicate(p, rng.random()))
+        else:
+            actions.append(Emit(p, ets, rng.randrange(1, 1000),
+                                lost=rng.random() < p_lost))
+    lo, hi = max(1, n_events // 4), max(2, 3 * n_events // 4)
+    for c in range(max(1, n_crashes)):
+        pos = rng.randrange(lo, hi)
+        actions.insert(pos, Crash(rng.randrange(producers),
+                                  torn=c == 0))
+    return actions
+
+
+class ChaosHarness:
+    """Executes a chaos schedule against real edge ingestors.
+
+    One shared store-side ledger + dead-letter queue (they live with
+    the store, not the producer), one EdgeBuffer directory per producer
+    (it lives with the instrument and survives its crashes).
+    """
+
+    def __init__(self, ctx, root, producers: int, *,
+                 window_s: float = 1.0, segment_bytes: int = 512,
+                 addb=None):
+        self.ctx = ctx
+        self.root = Path(root)
+        self.window_s = window_s
+        self.segment_bytes = segment_bytes
+        self.addb = addb
+        self.ledger = IdempotencyLedger()
+        self.dlq = DeadLetterQueue()
+        self.ingestors: List[EdgeIngestor] = [
+            self._make_ingestor(p) for p in range(producers)]
+        self.delivered: List[List[EdgeRecord]] = [[] for _ in
+                                                  range(producers)]
+        self.expected: Dict[int, int] = {}      # composite key -> sum
+        self.counts = {"emitted": 0, "lost": 0, "duplicates_injected": 0,
+                       "poison_injected": 0, "crashes": 0,
+                       "torn_crashes": 0, "replays": 0,
+                       "replay_applied": 0}
+        self._retired: Dict[str, int] = {}      # counts of dead ingestors
+
+    def _make_ingestor(self, p: int) -> EdgeIngestor:
+        buf = EdgeBuffer(self.root / f"p{p}", source=f"edge-p{p}",
+                         segment_bytes=self.segment_bytes)
+        return EdgeIngestor(self.ctx, buf, producer=p,
+                            ledger=self.ledger, dlq=self.dlq,
+                            addb=self.addb)
+
+    def _key(self, producer: int, event_ts: float) -> int:
+        return producer * KEYSPAN + int(event_ts // self.window_s)
+
+    # -- actions -------------------------------------------------------
+
+    def run(self, actions: List[Action]) -> Dict[str, int]:
+        for a in actions:
+            if isinstance(a, Emit):
+                self._emit(a)
+            elif isinstance(a, Duplicate):
+                self._duplicate(a)
+            elif isinstance(a, Poison):
+                self._poison(a)
+            elif isinstance(a, Crash):
+                self._crash(a)
+            else:                     # pragma: no cover - schedule bug
+                raise TypeError(f"unknown chaos action {a!r}")
+        return dict(self.counts)
+
+    def _emit(self, a: Emit):
+        ing = self.ingestors[a.producer]
+        key = self._key(a.producer, a.event_ts)
+        payload = encode_array(np.array([key, a.value], np.int64))
+        self.expected[key] = self.expected.get(key, 0) + a.value
+        rec = ing.buffer.append(f"s{a.producer}", payload,
+                                event_ts=a.event_ts)
+        self.counts["emitted"] += 1
+        if a.lost:                    # crashed between append and send
+            self.counts["lost"] += 1
+            return
+        ing.deliver(rec)
+        self.delivered[a.producer].append(rec)
+
+    def _duplicate(self, a: Duplicate):
+        past = self.delivered[a.producer]
+        if not past:
+            return                    # nothing delivered yet to repeat
+        rec = past[int(a.pick * len(past))]
+        outcome = self.ingestors[a.producer].deliver(rec)
+        assert outcome == "duplicate", \
+            f"redelivery of {rec.event_id} returned {outcome}"
+        self.counts["duplicates_injected"] += 1
+
+    def _poison(self, a: Poison):
+        outcome = self.ingestors[a.producer].send(
+            f"s{a.producer}", b"\x89NOT-AN-NPY\x00corrupt",
+            event_ts=a.event_ts)
+        assert outcome == "poison"
+        self.counts["poison_injected"] += 1
+
+    def _crash(self, a: Crash):
+        p = a.producer
+        old = self.ingestors[p]
+        self._retire(old)             # keep its books before it dies
+        old.buffer.close()            # the process is gone
+        if a.torn:
+            self._tear_tail(p)
+            self.counts["torn_crashes"] += 1
+        self.counts["crashes"] += 1
+        fresh = self._make_ingestor(p)       # restart: acks forgotten
+        out = fresh.replay()                 # everything unpruned again
+        fresh.prune()
+        self.counts["replays"] += 1
+        self.counts["replay_applied"] += out["applied"]
+        self.ingestors[p] = fresh
+        self.delivered[p] = []        # the old process's refs are gone
+
+    def _tear_tail(self, p: int):
+        """Simulate dying mid-append: durably start a record that never
+        finishes.  Its value is a sentinel that must never surface."""
+        buf_dir = self.root / f"p{p}"
+        buf = EdgeBuffer(buf_dir, source=f"edge-p{p}",
+                         segment_bytes=self.segment_bytes)
+        buf.append(f"s{p}", encode_array(
+            np.array([0, TORN_SENTINEL], np.int64)), event_ts=0.0)
+        buf.close()
+        seg = sorted(buf_dir.glob("seg-*.log"))[-1]
+        with seg.open("r+b") as fh:
+            fh.seek(0, 2)
+            fh.truncate(fh.tell() - 5)       # tail record now torn
+
+    # -- recovery ------------------------------------------------------
+
+    def final_recovery(self) -> Dict[str, int]:
+        """End-of-run pass: every producer replays (delivering events
+        lost between append and send) and prunes.  After this, every
+        emitted event has reached a terminal outcome exactly once."""
+        out = {"applied": 0, "duplicate": 0, "poison": 0}
+        for ing in self.ingestors:
+            for k, v in ing.replay().items():
+                out[k] += v
+            ing.prune()
+        return out
+
+    # -- aggregate bookkeeping -----------------------------------------
+
+    _ING_KEYS = ("applied", "duplicates", "poison", "backpressure",
+                 "replays")
+    _BUF_KEYS = ("appended", "acked", "pruned_segments",
+                 "torn_tail_recovered", "replayed")
+
+    def _retire(self, ing: EdgeIngestor):
+        ist, bst = ing.stats, ing.buffer.stats
+        for k in self._ING_KEYS:
+            self._retired[f"ingest_{k}"] = \
+                self._retired.get(f"ingest_{k}", 0) + ist[k]
+        for k in self._BUF_KEYS:
+            self._retired[f"buf_{k}"] = \
+                self._retired.get(f"buf_{k}", 0) + bst[k]
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Schedule counters + ingestor/buffer counters summed over the
+        *whole* run — including ingestors retired by crashes."""
+        agg: Dict[str, int] = dict(self.counts)
+        agg.update(self._retired)
+        for ing in self.ingestors:
+            ist, bst = ing.stats, ing.buffer.stats
+            for k in self._ING_KEYS:
+                agg[f"ingest_{k}"] = agg.get(f"ingest_{k}", 0) + ist[k]
+            for k in self._BUF_KEYS:
+                agg[f"buf_{k}"] = agg.get(f"buf_{k}", 0) + bst[k]
+        agg["dead_letters"] = self.dlq.published
+        return agg

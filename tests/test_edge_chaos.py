@@ -1,0 +1,284 @@
+"""The chaos gauntlet: hostile producers vs exactly-once windows.
+
+Drives the seeded fault-injection scheduler (tests/chaos.py) end to
+end — duplicates, bounded reordering, poison events, producer crashes
+with torn-tail recovery and replay — against a live ContinuousQuery,
+and asserts the headline invariant of resilient edge ingestion: the
+streaming window aggregates (plus explicit unassigned-late
+accounting) equal a batch recomputation of the same elements *and*
+the schedule's ground truth, exactly, integer for integer.
+
+Seeds come from ``SAGE_CHAOS_SEEDS`` (comma-separated) so CI can run a
+matrix; the default single seed keeps the local suite fast.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from chaos import KEYSPAN, TORN_SENTINEL, ChaosHarness, make_schedule
+from repro.analytics import EventWindow, col
+from repro.core import StreamContext, StreamTap
+from repro.core.streams import tee
+from repro.edge import EdgeBuffer, EdgeIngestor
+
+SEEDS = [int(s) for s in
+         os.environ.get("SAGE_CHAOS_SEEDS", "7").split(",") if s.strip()]
+
+WINDOW_S = 1.0
+REORDER_S = 0.4
+LATENESS_S = 0.5          # > reorder span: reordering alone never loses
+
+
+@pytest.fixture()
+def eng(sage):
+    e = sage.analytics(use_kernels=False)
+    yield e
+    e.close()
+
+
+def _grouped_to_dict(results):
+    """Fold grouped WindowResults into {composite key: int sum}."""
+    out = {}
+    for r in results:
+        if r.value is None:
+            continue
+        keys, vals = r.value
+        for k, v in zip(keys, vals):
+            out[int(k)] = out.get(int(k), 0) + int(v)
+    return out
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_exactly_once_vs_batch(eng, tmp_path, seed):
+    producers = 2
+    tap = StreamTap()
+    ctx = StreamContext(n_producers=producers, attach=tap)
+    ds = eng.from_stream(ctx).key_by(col(0)).aggregate("sum",
+                                                       value=col(1))
+    cq = eng.run_continuous(
+        ds, EventWindow(WINDOW_S, allowed_lateness_s=LATENESS_S),
+        delta_rows=16)
+
+    harness = ChaosHarness(ctx, tmp_path / "edge", producers,
+                           window_s=WINDOW_S)
+    actions = make_schedule(seed, producers=producers, n_events=150,
+                            window_s=WINDOW_S, reorder_s=REORDER_S)
+    harness.run(actions)
+    recovery = harness.final_recovery()
+    assert ctx.close()
+    results = cq.close()
+
+    # the schedule really was hostile
+    st = harness.stats
+    assert st["crashes"] >= 1 and st["torn_crashes"] >= 1
+    assert st["duplicates_injected"] >= 1
+    assert st["poison_injected"] >= 1
+    assert st["lost"] >= 1
+    # every lost event came back through a replay, exactly once
+    assert st["ingest_applied"] == st["emitted"]
+    assert recovery["applied"] + st["replay_applied"] >= st["lost"]
+    # poison routed to the DLQ exactly once each (replays deduplicate)
+    assert harness.dlq.published == st["poison_injected"]
+    assert all(d.payload.startswith(b"\x89NOT-AN-NPY")
+               for d in harness.dlq.drain())
+    # torn tails were recovered (truncated), not raised as corruption
+    assert st["buf_torn_tail_recovered"] >= 1
+
+    # ---- the invariant: streaming + late accounting == batch == truth
+    streaming = _grouped_to_dict(results)
+    late_adjust = {}
+    for le in cq.late:
+        if not le.assigned:
+            k, v = int(le.payload[0]), int(le.payload[1])
+            late_adjust[k] = late_adjust.get(k, 0) + v
+
+    keys, vals = (eng.from_stream(tap).key_by(col(0))
+                  .aggregate("sum", value=col(1)).collect())
+    batch = {int(k): int(v) for k, v in zip(keys, vals)}
+
+    assert batch == harness.expected        # nothing lost, nothing doubled
+    combined = dict(streaming)
+    for k, v in late_adjust.items():
+        combined[k] = combined.get(k, 0) + v
+    assert combined == batch                # exactly-once window aggregates
+    assert TORN_SENTINEL not in set(batch.values())
+
+    # operator fully drained
+    cst = cq.stats
+    assert cst["open_windows"] == 0 and cst["buffered_rows"] == 0
+
+
+def test_chaos_deterministic_schedules():
+    a = make_schedule(42, producers=3, n_events=80)
+    b = make_schedule(42, producers=3, n_events=80)
+    c = make_schedule(43, producers=3, n_events=80)
+    assert a == b
+    assert a != c
+
+
+def test_crash_replay_is_idempotent_across_restarts(eng, tmp_path):
+    """Two consecutive crash/replay cycles with no new events must not
+    change any aggregate: replays are pure duplicates."""
+    producers = 1
+    tap = StreamTap()
+    ctx = StreamContext(n_producers=producers, attach=tap)
+    ds = eng.from_stream(ctx).key_by(col(0)).aggregate("sum",
+                                                       value=col(1))
+    cq = eng.run_continuous(ds, EventWindow(1.0, allowed_lateness_s=0.5),
+                            delta_rows=4)
+    harness = ChaosHarness(ctx, tmp_path / "edge", producers)
+    ing = harness.ingestors[0]
+    for i in range(10):
+        ing.send("s0", np.array([i // 4, i], np.int64),
+                 event_ts=0.1 * i)
+    for _ in range(2):
+        out = harness.ingestors[0].replay()
+        assert out["applied"] == 0 and out["duplicate"] == 10
+    assert ctx.close()
+    results = cq.close()
+    assert _grouped_to_dict(results) == {0: 0 + 1 + 2 + 3,
+                                         1: 4 + 5 + 6 + 7,
+                                         2: 8 + 9}
+
+
+# ---------------------------------------------------------------------------
+# regression: stream-runtime behaviour under chaos-adjacent races
+# ---------------------------------------------------------------------------
+
+def test_tee_isolation_mid_chaos(eng, tmp_path):
+    """A raising tee branch must not starve the tap branch while an
+    ingestor is replaying — the batch recomputation stays complete."""
+    tap = StreamTap()
+    boom = {"n": 0}
+
+    def flaky(el):
+        boom["n"] += 1
+        raise RuntimeError("flaky persistence branch")
+
+    ctx = StreamContext(n_producers=1, attach=tee(flaky, tap))
+    buf = EdgeBuffer(tmp_path / "b", source="p0")
+    ing = EdgeIngestor(ctx, buf, producer=0)
+    for i in range(8):
+        ing.send("s0", np.array([0, 1], np.int64), event_ts=0.1 * i)
+    ing.replay()                      # redeliveries: all duplicates
+    assert ctx.close()
+    rows = tap.partitions()["s0"]
+    assert rows.shape[0] == 8         # every applied element reached tap
+    assert boom["n"] == 8             # branch ran (and raised) every time
+    assert ctx.stats["attach_errors"] == 8
+
+
+def test_drop_oldest_accounting_under_concurrent_producers():
+    """Under drop_oldest, concurrent producers hammering a full queue
+    must never block and must account every displaced element:
+    produced == consumed + dropped, with no thread stuck."""
+    gate = threading.Event()
+
+    def slow(el):
+        gate.wait(5.0)
+
+    ctx = StreamContext(n_producers=2, queue_depth=4, attach=slow,
+                        drop_policy="drop_oldest", consumer_ratio=2)
+    n_per = 200
+    errs = []
+
+    def producer(p):
+        try:
+            for i in range(n_per):
+                ctx.push(p, f"s{p}", i, event_ts=float(i))
+        except Exception as e:          # pragma: no cover - the bug
+            errs.append(e)
+
+    threads = [threading.Thread(target=producer, args=(p,))
+               for p in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10.0)
+    stuck = [t for t in threads if t.is_alive()]
+    gate.set()
+    assert not stuck, "drop_oldest producer blocked on a full queue"
+    assert not errs
+    assert ctx.close()
+    st = ctx.stats
+    assert st["produced"] == 2 * n_per
+    assert st["consumed"] + st["dropped"] == st["produced"]
+    assert st["pending"] == 0
+
+
+def test_error_policy_raises_typed_backpressure():
+    from repro.core import StreamBackpressureError
+
+    gate = threading.Event()
+    ctx = StreamContext(n_producers=1, queue_depth=2,
+                        attach=lambda el: gate.wait(5.0),
+                        drop_policy="error")
+    try:
+        with pytest.raises(StreamBackpressureError) as ei:
+            for i in range(50):
+                ctx.push(0, "s0", i)
+        assert ei.value.producer == 0
+        assert ei.value.stream_id == "s0"
+        assert ei.value.policy == "error"
+        assert ctx.stats["backpressure_errors"] >= 1
+    finally:
+        gate.set()
+        ctx.close()
+
+
+def test_block_policy_timeout_raises_backpressure():
+    from repro.core import StreamBackpressureError
+
+    gate = threading.Event()
+    ctx = StreamContext(n_producers=1, queue_depth=1,
+                        attach=lambda el: gate.wait(5.0))
+    try:
+        ctx.push(0, "s0", 0)
+        with pytest.raises(StreamBackpressureError):
+            for i in range(4):
+                ctx.push(0, "s0", i, timeout=0.05)
+    finally:
+        gate.set()
+        ctx.close()
+
+
+def test_backpressured_ingest_is_retryable(eng, tmp_path):
+    """A backpressured delivery leaves the record unacked and unmarked,
+    so a later replay applies it — no silent loss, no double count."""
+    gate = threading.Event()
+    tap = StreamTap()
+
+    def gated(el):
+        gate.wait(5.0)
+        tap(el)
+
+    ctx = StreamContext(n_producers=1, queue_depth=1, attach=gated,
+                        drop_policy="error")
+    from repro.core import StreamBackpressureError
+    buf = EdgeBuffer(tmp_path / "b", source="p0")
+    ing = EdgeIngestor(ctx, buf, producer=0)
+    sent, rejected = 0, 0
+    for i in range(6):
+        try:
+            ing.send("s0", np.array([0, 1 << i], np.int64),
+                     event_ts=0.1 * i)
+            sent += 1
+        except StreamBackpressureError:
+            rejected += 1
+    assert rejected >= 1
+    gate.set()                         # store pressure clears
+    deadline = time.time() + 10.0
+    while True:                        # replay retries until admitted
+        try:
+            ing.replay()
+            break
+        except StreamBackpressureError:
+            assert time.time() < deadline
+            time.sleep(0.01)
+    assert ing.stats["applied"] == 6   # every event exactly once
+    assert ctx.close()
+    total = int(tap.partitions()["s0"][:, 1].sum())
+    assert total == sum(1 << i for i in range(6))   # exactly once each

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on the edge-ingestion invariants:
+EdgeBuffer round-trip / prune / replay / torn-tail recovery, and the
+idempotency ledger's multiset-collapse algebra.  Skipped wholesale
+when hypothesis is not installed so the rest of the suite still
+collects and runs."""
+import itertools
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.edge import EdgeBuffer, EdgeBufferCorruption, IdempotencyLedger
+
+_DIR = itertools.count()
+
+
+def _fresh_dir(tmp_path):
+    return tmp_path / f"buf{next(_DIR)}"
+
+
+_events = st.lists(
+    st.tuples(st.sampled_from(["a", "b", "stream/π"]),
+              st.binary(max_size=64),
+              st.floats(min_value=0.0, max_value=1e6, allow_nan=False)),
+    min_size=1, max_size=30)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(events=_events, segment_bytes=st.integers(64, 512))
+def test_buffer_replay_roundtrips_every_append(tmp_path, events,
+                                               segment_bytes):
+    """replay() after reopen yields exactly the appended records, in
+    id order, bit-identical — across arbitrary segment-roll points."""
+    root = _fresh_dir(tmp_path)
+    buf = EdgeBuffer(root, segment_bytes=segment_bytes)
+    want = []
+    for sid, payload, ets in events:
+        rec = buf.append(sid, payload, event_ts=ets)
+        want.append((rec.event_id, sid, payload, float(ets)))
+    buf.close()
+    re = EdgeBuffer(root, segment_bytes=segment_bytes)
+    got = [(r.event_id, r.stream_id, r.payload, r.event_ts)
+           for r in re.replay()]
+    assert got == want
+    assert [eid for eid, *_ in got] == list(range(len(events)))
+    assert re.next_event_id == len(events)
+    re.close()
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(events=_events, segment_bytes=st.integers(64, 256),
+       n_ack=st.integers(0, 30))
+def test_prune_never_loses_unacked_records(tmp_path, events,
+                                           segment_bytes, n_ack):
+    """After acking an arbitrary prefix-ish subset and pruning, every
+    unacked record still replays; ids never restart after reopen."""
+    root = _fresh_dir(tmp_path)
+    buf = EdgeBuffer(root, segment_bytes=segment_bytes)
+    recs = [buf.append(sid, p, event_ts=ts) for sid, p, ts in events]
+    acked = {r.event_id for r in recs[:min(n_ack, len(recs))]}
+    for eid in acked:
+        buf.ack(eid)
+    buf.prune()
+    survivors = {r.event_id for r in buf.replay()}
+    assert {r.event_id for r in recs} - acked <= survivors
+    buf.close()
+    # monotonic ids across reopen even after maximal pruning
+    re = EdgeBuffer(root, segment_bytes=segment_bytes)
+    assert re.next_event_id == len(recs)
+    nxt = re.append("tail", b"x")
+    assert nxt.event_id == len(recs)
+    re.close()
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(events=_events, cut=st.integers(1, 12))
+def test_torn_final_record_recovers_prefix(tmp_path, events, cut):
+    """Truncating the last segment mid-record loses at most the final
+    record; reopen recovers every earlier one and counts the tear."""
+    root = _fresh_dir(tmp_path)
+    buf = EdgeBuffer(root, segment_bytes=1 << 16)
+    recs = [buf.append(sid, p, event_ts=ts) for sid, p, ts in events]
+    buf.close()
+    seg = sorted(root.glob("seg-*.log"))[-1]
+    size = seg.stat().st_size
+    torn_cut = min(cut, len(recs[-1].encode()) - 1)
+    with seg.open("r+b") as fh:
+        fh.truncate(size - torn_cut)
+    re = EdgeBuffer(root, segment_bytes=1 << 16)
+    got = [r.event_id for r in re.replay()]
+    assert got == [r.event_id for r in recs[:-1]]
+    assert re.stats["torn_tail_recovered"] >= 1
+    assert re.next_event_id == len(recs) - 1
+    re.close()
+
+
+def test_mid_file_damage_raises_corruption(tmp_path):
+    """Checksum damage *before* the tail is not a torn append — it must
+    raise, not silently skip records."""
+    root = _fresh_dir(tmp_path)
+    buf = EdgeBuffer(root, segment_bytes=1 << 16)
+    for i in range(4):
+        buf.append("s", b"payload-%d" % i)
+    buf.close()
+    seg = sorted(root.glob("seg-*.log"))[0]
+    data = bytearray(seg.read_bytes())
+    data[10] ^= 0xFF                  # flip a byte inside record 0
+    seg.write_bytes(bytes(data))
+    with pytest.raises(EdgeBufferCorruption):
+        EdgeBuffer(root, segment_bytes=1 << 16)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ids=st.lists(st.integers(0, 40), min_size=0, max_size=80),
+       dup_factor=st.integers(1, 3))
+def test_ledger_multiset_with_dups_equals_set_once(ids, dup_factor):
+    """Admitting any multiset of event ids (arbitrary order, arbitrary
+    duplication) admits exactly the distinct set, once each."""
+    ledger = IdempotencyLedger()
+    admitted = [eid for eid in ids * dup_factor
+                if ledger.admit("src", eid)]
+    assert sorted(admitted) == sorted(set(ids))
+    assert all(ledger.seen("src", eid) for eid in ids)
+    # floor + sparse set cover exactly the distinct ids
+    floor = ledger.floor("src")
+    assert set(range(floor + 1)) <= set(ids) or floor == -1
+    assert len(ledger) == len(set(ids))
+
+
+@settings(max_examples=30, deadline=None)
+@given(ids=st.lists(st.integers(0, 25), min_size=1, max_size=60))
+def test_ledger_floor_compacts_contiguous_prefix(ids):
+    """Once ids 0..k have all been marked, the sparse set holds only
+    ids above the floor — memory is the out-of-order tail, not the
+    stream history."""
+    ledger = IdempotencyLedger()
+    for eid in ids:
+        ledger.mark("src", eid)
+    distinct = set(ids)
+    k = -1
+    while k + 1 in distinct:
+        k += 1
+    assert ledger.floor("src") == k
+    assert ledger.pending_gap("src") == len([i for i in distinct if i > k])
+
+
+def test_ledger_sources_are_independent():
+    ledger = IdempotencyLedger()
+    assert ledger.admit("p0", 0)
+    assert ledger.admit("p1", 0)      # same id, different source: fresh
+    assert not ledger.admit("p0", 0)
+    assert ledger.floor("p0") == 0 and ledger.floor("p1") == 0

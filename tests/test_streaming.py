@@ -81,6 +81,51 @@ def test_watermark_idle_timeout_excludes_silent_producer():
     assert wm.watermark(idle_timeout_s=0.01) == 7.0
 
 
+def test_watermark_monotonic_floor_under_idle_and_seal_races():
+    """Regression: the merged watermark must never regress, even when
+    an idle-excluded producer wakes up behind the floor, and sealing
+    must never pull it backwards either."""
+    wm = WatermarkTracker(3)
+    wm.observe(0, 10.0)
+    wm.observe(1, 8.0)
+    # producer 2 idle: excluded, merge advances to min(10, 8) = 8
+    time.sleep(0.05)
+    wm.observe(0, 10.0)                        # 0 and 1 stay active
+    wm.observe(1, 8.0)
+    assert wm.watermark(idle_timeout_s=0.01) == 8.0
+    # the idle producer wakes up BEHIND the floor — no regression
+    wm.observe(2, 3.0)
+    assert wm.watermark(idle_timeout_s=0.01) == 8.0
+    assert wm.watermark() == 8.0               # strict merge floored too
+    # racing seal of the furthest producer can't move it backwards
+    wm.seal(0)
+    assert wm.watermark() == 8.0
+    # catching up re-advances normally
+    wm.observe(2, 9.0)
+    assert wm.watermark() == 8.0               # producer 1 still at 8
+    wm.observe(1, 12.0)
+    assert wm.watermark() == 9.0
+    # hammer watermark() from threads while sealing: monotone throughout
+    seen, stop = [], threading.Event()
+
+    def poll():
+        prev = float("-inf")
+        while not stop.is_set():
+            cur = wm.watermark(idle_timeout_s=0.01)
+            seen.append(cur >= prev)
+            prev = cur
+
+    t = threading.Thread(target=poll)
+    t.start()
+    for p in (1, 2):
+        wm.seal(p)
+        time.sleep(0.01)
+    stop.set()
+    t.join()
+    assert all(seen)
+    assert wm.watermark() == float("inf")      # all sealed
+
+
 # ---------------------------------------------------------------------------
 # streaming plan validation
 # ---------------------------------------------------------------------------
@@ -366,3 +411,179 @@ def test_sliding_windows_overlap(eng):
     assert counts[(1.0, 3.0)] == 20
     assert counts[(-1.0, 1.0)] == 10           # leading partial
     assert counts[(3.0, 5.0)] == 10            # trailing partial
+
+
+# ---------------------------------------------------------------------------
+# session (gap) windows
+# ---------------------------------------------------------------------------
+
+def test_session_window_validation():
+    from repro.analytics import SessionWindow
+    with pytest.raises(ValueError):
+        SessionWindow(gap_s=0)
+    with pytest.raises(ValueError):
+        SessionWindow(gap_s=1, allowed_lateness_s=-1)
+
+
+def test_session_windows_split_on_gaps(eng):
+    from repro.analytics import SessionWindow
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, SessionWindow(gap_s=5.0), delta_rows=1)
+    for ts, v in [(0.0, 1), (3.0, 2), (6.0, 4),   # one burst: [0, 11)
+                  (20.0, 8)]:                     # next burst: [20, 25)
+        ctx.push(0, "s", np.array([v], np.int64), event_ts=ts)
+    assert ctx.close()
+    res = cq.close()
+    assert [(r.start, r.end, int(r.value), r.rows) for r in res] == \
+        [(0.0, 11.0, 7, 3), (20.0, 25.0, 8, 1)]
+    assert all(r.final for r in res)
+    st = cq.stats
+    assert st["open_windows"] == 0 and st["windows_closed"] == 2
+
+
+def test_session_straggler_welds_two_bursts(eng):
+    """A straggler landing between two open sessions merges them into
+    one — the Dataflow session-merge semantics."""
+    from repro.analytics import SessionWindow
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(
+        ds, SessionWindow(gap_s=5.0, allowed_lateness_s=10.0),
+        delta_rows=1)
+    for ts, v in [(0.0, 1), (8.0, 2),   # two sessions: [0,5) and [8,13)
+                  (4.0, 4),             # straggler overlaps both: weld
+                  (30.0, 8)]:           # pushes the watermark past it
+        ctx.push(0, "s", np.array([v], np.int64), event_ts=ts)
+    assert ctx.close()
+    res = cq.close()
+    assert [(r.start, r.end, int(r.value), r.rows) for r in res] == \
+        [(0.0, 13.0, 7, 3), (30.0, 35.0, 8, 1)]
+    assert cq.stats["session_merges"] == 1
+
+
+def test_session_window_late_element_routed(eng):
+    from repro.analytics import SessionWindow
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, SessionWindow(gap_s=1.0), delta_rows=1)
+    ctx.push(0, "s", np.array([1], np.int64), event_ts=0.0)
+    ctx.push(0, "s", np.array([2], np.int64), event_ts=50.0)
+    ctx.flush(30)
+    # ets 10: its would-be session [10, 11) is far behind the watermark
+    # and touches nothing open -> late side channel, not a window
+    ctx.push(0, "s", np.array([4], np.int64), event_ts=10.0)
+    assert ctx.close()
+    res = cq.close()
+    assert cq.late_count == 1
+    assert not cq.late[0].assigned
+    assert sum(int(r.value) for r in res) == 3    # 4 never aggregated
+
+
+def test_session_grouped_aggregates(eng):
+    from repro.analytics import SessionWindow
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).key_by(col(0)).aggregate("sum",
+                                                       value=col(1))
+    cq = eng.run_continuous(ds, SessionWindow(gap_s=2.0), delta_rows=2)
+    for ts, k, v in [(0.0, 0, 1), (1.0, 1, 2), (1.5, 0, 4),
+                     (10.0, 1, 8)]:
+        ctx.push(0, "s", np.array([k, v], np.int64), event_ts=ts)
+    assert ctx.close()
+    res = cq.close()
+    assert len(res) == 2
+    keys, vals = res[0].value                     # burst [0, 3.5)
+    assert {int(k): int(v) for k, v in zip(keys, vals)} == {0: 5, 1: 2}
+    keys, vals = res[1].value                     # burst [10, 12)
+    assert {int(k): int(v) for k, v in zip(keys, vals)} == {1: 8}
+
+
+def test_retraction_rejected_for_session_windows(eng):
+    from repro.analytics import SessionWindow
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    try:
+        with pytest.raises(ValueError, match="session"):
+            eng.run_continuous(ds, SessionWindow(gap_s=1.0),
+                               retraction=True)
+        with pytest.raises(TypeError, match="EventWindow"):
+            eng.run_continuous(ds, 1.0)        # not a window spec at all
+    finally:
+        ctx.close()
+
+
+# ---------------------------------------------------------------------------
+# speculative emission + retraction for late data
+# ---------------------------------------------------------------------------
+
+def test_retraction_provisional_then_revised_then_final(eng):
+    """Once the watermark passes a window's end (but not yet its
+    lateness bound) a provisional result is emitted; late data inside
+    the bound retracts it with a higher revision; the lateness bound
+    commits the final value — identical to final-only mode's."""
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+    cq = eng.run_continuous(ds, EventWindow(10.0, allowed_lateness_s=10.0),
+                            delta_rows=1, retraction=True)
+
+    def push(ts, v):
+        ctx.push(0, "s", np.array([v], np.int64), event_ts=ts)
+
+    push(1.0, 1)
+    push(12.0, 2)                   # wm 12: [0,10) provisional
+    ctx.flush(30)
+    push(5.0, 8)                    # late, within bound: dirty
+    push(13.0, 1)                   # wm moves: re-emission (retraction)
+    ctx.flush(30)
+    push(25.0, 1)                   # wm 25: [0,10) final
+    assert ctx.close()
+    w0 = [r for r in cq.close() if r.start == 0.0]
+    assert [(int(r.value), r.final, r.revision) for r in w0] == \
+        [(1, False, 0), (9, False, 1), (9, True, 2)]
+    st = cq.stats
+    assert st["retractions"] >= 1 and st["provisional_emits"] >= 2
+    assert st["open_windows"] == 0 and st["buffered_rows"] == 0
+
+
+def test_retraction_final_matches_final_only_mode(eng):
+    """The committed (final) values under retraction mode are exactly
+    what final-only mode emits for the same elements."""
+    feed = [(i * 0.37, (i * 7) % 13) for i in range(60)] + \
+           [(2.0, 100), (4.5, 200)]          # stragglers within bound
+
+    def run(retraction):
+        ctx = StreamContext(n_producers=1)
+        ds = eng.from_stream(ctx).aggregate("sum", value=col(0))
+        cq = eng.run_continuous(
+            ds, EventWindow(3.0, allowed_lateness_s=30.0),
+            delta_rows=4, retraction=retraction)
+        for ts, v in feed:
+            ctx.push(0, "s", np.array([v], np.int64), event_ts=ts)
+        assert ctx.close()
+        return {(r.start, r.end): int(r.value)
+                for r in cq.close() if r.final}
+
+    assert run(True) == run(False)
+
+
+def test_retraction_higher_revision_supersedes(eng):
+    """Every re-emission for the same window carries a strictly higher
+    revision, and the final one is the highest — a consumer keeping
+    max-revision per window always converges on the committed value."""
+    ctx = StreamContext(n_producers=1)
+    ds = eng.from_stream(ctx).aggregate("count")
+    cq = eng.run_continuous(ds, EventWindow(5.0, allowed_lateness_s=20.0),
+                            delta_rows=1, retraction=True)
+    for ts in [1.0, 7.0, 2.0, 8.0, 3.0, 9.0, 4.0, 30.0]:
+        ctx.push(0, "s", np.array([1], np.int64), event_ts=ts)
+    assert ctx.close()
+    by_rev = {}
+    for r in cq.close():
+        if r.start != 0.0:
+            continue
+        assert r.revision not in by_rev       # never reused
+        by_rev[r.revision] = r
+    revs = sorted(by_rev)
+    assert revs == list(range(len(revs)))     # dense, increasing
+    assert by_rev[revs[-1]].final             # highest revision commits
+    assert int(by_rev[revs[-1]].value) == 4   # ets 1, 2, 3, 4
