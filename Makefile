@@ -3,7 +3,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench bench-percipience bench-analytics bench-streaming \
-        bench-dht bench-cluster bench-edge bench-serving docs-check
+        bench-dht bench-cluster bench-edge bench-serving \
+        bench-compaction docs-check
 
 # tier-1 verify (ROADMAP.md); CI adds PYTEST_EXTRA="--timeout=120"
 # (pytest-timeout is in requirements-dev, not assumed locally)
@@ -41,3 +42,9 @@ bench-edge:
 # full-size on purpose: acceptance needs the 10/100/1000-session levels
 bench-serving:
 	$(PYTHON) -m benchmarks.run --only serving
+
+# ingest-while-query with/without the compactor: >= 1.5x throughput,
+# lower read amplification, snapshot byte-identity under churn
+# (writes results/BENCH_compaction.json)
+bench-compaction:
+	$(PYTHON) -m benchmarks.run --only compaction

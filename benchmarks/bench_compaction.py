@@ -1,0 +1,209 @@
+"""Log-structured compaction — ingest-while-query throughput and read
+amplification, with and without the compactor.
+
+Two legs over the same workload shape (a preloaded container plus an
+ingest thread appending small delta blocks while the main thread runs
+filter+sum queries for a fixed duration):
+
+  * **baseline** — plain ``put_array`` delta blocks, no manifests: the
+    container's partition count grows with every append, each query
+    re-plans and re-scans an ever-longer tail of small blocks, and the
+    partial cache (deliberately sized below the final partition count)
+    thrashes;
+  * **compaction** — ``Clovis.compaction()`` appends behind per-
+    container manifests with the background compactor merging small
+    runs into large RTHMS-placed blocks: queries pin a manifest
+    snapshot, scan a handful of merged blocks, and version-keyed
+    partials stay hot for every block compaction did not touch.
+
+Reported per leg: query throughput, appends absorbed, mean partitions
+per query, and mean read amplification (bytes scanned at the store per
+query / logical bytes of the container at that moment).  The compaction
+leg also runs snapshot byte-identity probes: pin, read, wait for the
+compactor to churn, read again — both reads must be byte-identical
+while ingest and compaction rewrite the container underneath.
+
+Emits the usual CSV rows plus ``results/BENCH_compaction.json``.
+Acceptance (``strict``): >= 1.5x query throughput with compaction and
+strictly lower read amplification.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_clovis
+from repro.analytics import col
+
+ROWS_PER_DELTA = 256
+
+
+def _delta(i: int) -> np.ndarray:
+    rng = np.random.default_rng(1000 + i)
+    a = np.empty((ROWS_PER_DELTA, 4), np.int32)
+    a[:, 0] = rng.integers(0, 7, ROWS_PER_DELTA)
+    a[:, 1] = rng.integers(0, 100, ROWS_PER_DELTA)
+    a[:, 2] = rng.integers(-40, 40, ROWS_PER_DELTA)
+    a[:, 3] = i
+    return a
+
+
+def _leg(compaction: bool, *, duration_s: float, preload: int,
+         append_every_s: float, partial_cache_size: int) -> Dict:
+    clovis = fresh_clovis("compaction", devices_per_tier=3)
+    eng = clovis.analytics(use_kernels=False,
+                           partial_cache_size=partial_cache_size)
+    container = "events"
+    svc = clovis.compaction() if compaction else None
+
+    def append(i: int):
+        arr = _delta(i)
+        if svc is not None:
+            svc.append_rows(container, arr)
+        else:
+            clovis.put_array(f"{container}/delta-{i:06d}", arr,
+                             container=container)
+        return arr.nbytes
+
+    logical = {"bytes": 0}
+    for i in range(preload):
+        logical["bytes"] += append(i)
+
+    stop = threading.Event()
+    ingest = {"appends": preload}
+
+    def ingester():
+        i = preload
+        while not stop.is_set():
+            logical["bytes"] += append(i)
+            ingest["appends"] = i + 1
+            i += 1
+            stop.wait(append_every_s)
+
+    if svc is not None:
+        svc.start(interval_s=0.05)       # background compactor
+    t = threading.Thread(target=ingester, daemon=True)
+    t.start()
+
+    ds = eng.scan(container).filter(col(1) > 30).aggregate(
+        "sum", value=col(2))
+    queries = torn = 0
+    parts: List[int] = []
+    amp: List[float] = []
+    identity_probes = identity_ok = 0
+    t0 = time.perf_counter()
+    next_probe = t0 + duration_s / 4
+    while time.perf_counter() - t0 < duration_s:
+        try:
+            res = eng.run(ds)
+        except Exception:
+            torn += 1                    # caught a block mid-write:
+            continue                     # exactly what manifests prevent
+        queries += 1
+        parts.append(res.stats.partitions)
+        amp.append(res.stats.bytes_scanned / max(logical["bytes"], 1))
+        if svc is not None and time.perf_counter() >= next_probe:
+            # snapshot byte-identity under live ingest + compaction
+            snap = svc.pin(container)
+            try:
+                before = svc.read_rows(container, snapshot=snap)
+                time.sleep(0.15)         # let the compactor churn
+                after = svc.read_rows(container, snapshot=snap)
+                identity_probes += 1
+                identity_ok += int(before.shape == after.shape
+                                   and bool((before == after).all()))
+            finally:
+                svc.unpin(snap)
+            next_probe += duration_s / 4
+    wall = time.perf_counter() - t0
+    stop.set()
+    t.join()
+    if svc is not None:
+        svc.close()
+
+    label = "compaction" if compaction else "baseline"
+    out = {
+        "leg": label,
+        "wall_s": wall,
+        "queries": queries,
+        "qps": queries / wall,
+        "appends": ingest["appends"],
+        "torn_reads": torn,
+        "mean_partitions_per_query": float(np.mean(parts)) if parts else 0.0,
+        "final_partitions": parts[-1] if parts else 0,
+        "mean_read_amplification": float(np.mean(amp)) if amp else 0.0,
+        "identity_probes": identity_probes,
+        "identity_ok": identity_ok,
+    }
+    if svc is not None:
+        merges = clovis.addb.compaction_trace("merge")
+        out["merges"] = len(merges)
+        out["manifest_version"] = svc.manifest(container).version
+    eng.close()
+    return out
+
+
+def run(duration_s: float = 4.0, preload: int = 16,
+        append_every_s: float = 0.01, partial_cache_size: int = 64,
+        strict: bool = True) -> Dict:
+    legs = {
+        leg["leg"]: leg
+        for leg in (_leg(False, duration_s=duration_s, preload=preload,
+                         append_every_s=append_every_s,
+                         partial_cache_size=partial_cache_size),
+                    _leg(True, duration_s=duration_s, preload=preload,
+                         append_every_s=append_every_s,
+                         partial_cache_size=partial_cache_size))
+    }
+    base, comp = legs["baseline"], legs["compaction"]
+    speedup = comp["qps"] / max(base["qps"], 1e-9)
+    results = {"baseline": base, "compaction": comp, "speedup": speedup}
+
+    for leg in (base, comp):
+        emit(f"compaction_{leg['leg']}_qps", 1e6 / max(leg["qps"], 1e-9),
+             f"qps={leg['qps']:.1f};appends={leg['appends']};"
+             f"parts={leg['mean_partitions_per_query']:.1f};"
+             f"read_amp={leg['mean_read_amplification']:.2f};"
+             f"torn={leg['torn_reads']}")
+    emit("compaction_speedup", 0.0,
+         f"{speedup:.2f}x;merges={comp.get('merges', 0)};"
+         f"manifest_v={comp.get('manifest_version', 0)}")
+    emit("compaction_snapshot_identity", 0.0,
+         f"{comp['identity_ok']}/{comp['identity_probes']}_byte_identical")
+
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    path = out / "BENCH_compaction.json"
+    path.write_text(json.dumps(results, indent=2))
+    emit("compaction_bench_json", 0.0, str(path))
+
+    # acceptance: pinned snapshots are byte-identical under churn, and
+    # compaction pays for itself on ingest-while-query throughput and
+    # read amplification
+    if comp["identity_probes"] and \
+            comp["identity_ok"] != comp["identity_probes"]:
+        raise AssertionError(
+            f"snapshot identity violated: {comp['identity_ok']}/"
+            f"{comp['identity_probes']} probes byte-identical")
+    if strict:
+        if speedup < 1.5:
+            raise AssertionError(
+                f"compaction speedup {speedup:.2f}x < 1.5x "
+                f"(baseline {base['qps']:.1f} qps, "
+                f"compaction {comp['qps']:.1f} qps)")
+        if comp["mean_read_amplification"] >= \
+                base["mean_read_amplification"]:
+            raise AssertionError(
+                "read amplification did not improve: "
+                f"compaction {comp['mean_read_amplification']:.2f} >= "
+                f"baseline {base['mean_read_amplification']:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

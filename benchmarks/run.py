@@ -5,7 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
                                              streams|clovis|percipience|
                                              analytics|streaming|cluster|
-                                             edge|serving]
+                                             edge|serving|compaction]
                                             [--quick]
 """
 from __future__ import annotations
@@ -26,8 +26,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_analytics, bench_checkpoint, bench_clovis,
-                            bench_cluster, bench_dht, bench_edge,
-                            bench_percipience, bench_serving,
+                            bench_cluster, bench_compaction, bench_dht,
+                            bench_edge, bench_percipience, bench_serving,
                             bench_stream_windows, bench_streams)
 
     suites = {
@@ -70,6 +70,12 @@ def main() -> None:
         "edge": lambda: bench_edge.run(
             n_events=400 if args.quick else 1200,
             producers=2 if args.quick else 4),
+        # log-structured compaction: ingest-while-query throughput +
+        # read amplification with/without the compactor, plus snapshot
+        # byte-identity probes under live churn
+        "compaction": lambda: bench_compaction.run(
+            duration_s=2.0 if args.quick else 4.0,
+            strict=not args.quick),
         # serving front door: multi-tenant zipfian load at 10/100/1000
         # sessions — tail latency, Jain fairness, shed + dedup rates
         "serving": lambda: bench_serving.run(

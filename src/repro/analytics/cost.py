@@ -163,6 +163,12 @@ class StatsCatalog:
         self.max_partitions = max_partitions
         self.max_sel_obs = max_sel_obs
         self.version = 0              # bumped (under _lock) on any change
+        # per-container change counters + a global component: anything
+        # caching per-container derivations (the serving plan cache)
+        # keys on container_version() so a write to one container never
+        # invalidates another container's cached plans
+        self._cver: Dict[str, int] = {}
+        self._gver = 0                # cross-container feedback (node bw)
         self._stats: Dict[str, PartitionStats] = {}
         self._node_obs: Dict[str, Dict[str, float]] = {}
         # (frag_key, oid) -> EWMA of actually-observed selectivity
@@ -199,6 +205,23 @@ class StatsCatalog:
     def _on_write(self, oid: str, nbytes: int):
         self.invalidate(oid)
 
+    def _container_of(self, oid: str) -> str:
+        """The container an oid-scoped change belongs to — live store
+        metadata when available (computed outside ``_lock``; store
+        facades may take their own locks), oid prefix as the fallback
+        (the repo-wide ``<container>/<name>`` naming), else a shared
+        bucket."""
+        with self._lock:
+            store = self._store
+        if store is not None:
+            try:
+                return store.meta(oid).container
+            except KeyError:
+                pass
+        if "/" in oid:
+            return oid.split("/", 1)[0]
+        return "default"
+
     def _on_fdmi(self, event: str, oid: str, info: Dict):
         if event == "delete":
             self.invalidate(oid)
@@ -210,7 +233,8 @@ class StatsCatalog:
             if store is None:
                 return
             try:
-                version = store.meta(oid).version
+                meta = store.meta(oid)
+                version, container = meta.version, meta.container
             except KeyError:
                 return
             # re-read and replace in ONE critical section: a concurrent
@@ -224,6 +248,8 @@ class StatsCatalog:
                         st.oid, version, st.rows, st.ncols, st.nbytes,
                         st.cols)
                     self.version += 1
+                    self._cver[container] = \
+                        self._cver.get(container, 0) + 1
 
     def _on_ship(self, res):
         """FunctionShipper observer: harvest piggybacked summaries,
@@ -240,6 +266,7 @@ class StatsCatalog:
 
     def observe(self, oid: str, version: int, summary: Dict):
         st = PartitionStats.from_summary(oid, version, summary)
+        container = self._container_of(oid)
         with self._lock:
             if (len(self._stats) >= self.max_partitions
                     and oid not in self._stats):
@@ -248,8 +275,10 @@ class StatsCatalog:
                 self._stats.pop(next(iter(self._stats)))
             self._stats[oid] = st
             self.version += 1
+            self._cver[container] = self._cver.get(container, 0) + 1
 
     def invalidate(self, oid: str):
+        container = self._container_of(oid)
         with self._lock:
             dropped = self._stats.pop(oid, None) is not None
             stale = [k for k in self._sel_obs if k[1] == oid]
@@ -257,6 +286,7 @@ class StatsCatalog:
                 del self._sel_obs[k]
             if dropped or stale:
                 self.version += 1
+                self._cver[container] = self._cver.get(container, 0) + 1
 
     # -- observed-selectivity feedback (estimate correction) -----------
 
@@ -271,6 +301,7 @@ class StatsCatalog:
         ship-vs-fetch decision hinges on)."""
         actual = float(min(max(actual, 0.0), 1.0))
         key = (frag_key, oid)
+        container = self._container_of(oid)
         with self._lock:
             prev = self._sel_obs.get(key)
             if prev is None:
@@ -278,17 +309,31 @@ class StatsCatalog:
                     self._sel_obs.pop(next(iter(self._sel_obs)))
                 self._sel_obs[key] = actual
                 self.version += 1
+                self._cver[container] = self._cver.get(container, 0) + 1
             else:
                 self._sel_obs[key] = prev + alpha * (actual - prev)
                 # re-observing a stable selectivity must not thrash
                 # version-keyed plan caches: bump only on material drift
                 if abs(self._sel_obs[key] - prev) > 0.02:
                     self.version += 1
+                    self._cver[container] = \
+                        self._cver.get(container, 0) + 1
 
     def observed_selectivity(self, frag_key: str, oid: str
                              ) -> Optional[float]:
         with self._lock:
             return self._sel_obs.get((frag_key, oid))
+
+    def container_version(self, container: str) -> int:
+        """Change counter scoped to one container (plus the global
+        feedback component): bumps when *that* container's stats,
+        selectivity feedback, or any node-bandwidth estimate move —
+        and stays put when unrelated containers take writes.  The
+        serving plan cache keys on this instead of ``version`` so
+        sustained ingest into one container cannot evict every other
+        container's warm plans."""
+        with self._lock:
+            return self._cver.get(container, 0) + self._gver
 
     def get(self, oid: str) -> Optional[PartitionStats]:
         """Fresh stats for ``oid`` or None (missing or stale)."""
@@ -353,6 +398,8 @@ class StatsCatalog:
             # and bumping per ship would make cached plans unhittable
             if abs(obs["read_bw"] - prev_bw) > 0.1 * max(prev_bw, 1e-9):
                 self.version += 1
+                # node bandwidth shifts re-cost every container's plans
+                self._gver += 1
 
     def node_read_bw(self, node: str) -> Optional[float]:
         """Learned effective scan bandwidth of a node (bytes/s), or

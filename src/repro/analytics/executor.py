@@ -85,6 +85,8 @@ class QueryStats:
     merge_s: float = 0.0            # caller-side partial merge time
     dedup_hits: int = 0             # fragments shared with an in-flight
                                     # identical query (serving engines)
+    snapshot_version: int = -1      # pinned manifest version (-1: the
+                                    # container is not manifest-managed)
 
 
 @dataclass
@@ -219,6 +221,27 @@ class AnalyticsEngine:
         (empty when percipience is not attached)."""
         return self._policy_map(oids, "load_factor")
 
+    # -- manifest snapshot pinning -------------------------------------
+
+    def _pin_snapshot(self, container: str):
+        """Pin the container's current manifest version for the whole
+        query, so the partition list and every block stay immutable
+        while appends and compactions commit underneath (pinned blocks
+        survive GC).  None for containers without a manifest — they
+        behave exactly as before the compaction subsystem existed."""
+        registry = getattr(self.clovis, "manifests", None)
+        if registry is None:
+            return None
+        manifest = registry.lookup(container)
+        if manifest is None:
+            return None
+        return (manifest, manifest.pin())
+
+    @staticmethod
+    def _unpin_snapshot(pin):
+        if pin is not None:
+            pin[0].unpin(pin[1])
+
     # -- partial cache (fragment results keyed by object version) ------
 
     def _cache_invalidate(self, oid: str, nbytes: int = 0):
@@ -314,17 +337,26 @@ class AnalyticsEngine:
             partials = self._run_stream(ds, stats)
             value = merge_partials(plan, partials, self.kcfg)
         else:
-            oids = self._schedule(
-                self.clovis.container(ds.source.container))
-            plan = self._make_plan(ds, oids)
-            stats.plan_s = time.perf_counter() - t0
-            stats.plan = plan.describe()
-            t1 = time.perf_counter()
-            partials = self._run_container(ds, plan, oids, stats)
-            stats.exec_s = time.perf_counter() - t1
-            t2 = time.perf_counter()
-            value = merge_partials(plan, partials, self.kcfg)
-            stats.merge_s = time.perf_counter() - t2
+            pin = self._pin_snapshot(ds.source.container)
+            try:
+                if pin is not None:
+                    snap = pin[1]
+                    stats.snapshot_version = snap.version
+                    listing = snap.oids
+                else:
+                    listing = self.clovis.container(ds.source.container)
+                oids = self._schedule(listing)
+                plan = self._make_plan(ds, oids)
+                stats.plan_s = time.perf_counter() - t0
+                stats.plan = plan.describe()
+                t1 = time.perf_counter()
+                partials = self._run_container(ds, plan, oids, stats)
+                stats.exec_s = time.perf_counter() - t1
+                t2 = time.perf_counter()
+                value = merge_partials(plan, partials, self.kcfg)
+                stats.merge_s = time.perf_counter() - t2
+            finally:
+                self._unpin_snapshot(pin)
         stats.wall_s = time.perf_counter() - t0
         return QueryResult(value, stats)
 

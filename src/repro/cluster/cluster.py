@@ -128,6 +128,11 @@ class ClusterStore:
             except Exception:
                 pass   # plugins must not break the store
 
+    def fdmi_emit(self, event: str, oid: str, info: Optional[Dict] = None):
+        """Public FDMI emit (cluster-level) — same contract as
+        ``ObjectStore.fdmi_emit``."""
+        self._emit(event, oid, info)
+
 
 NodeSpec = Union[str, Tuple[str, str]]
 
@@ -183,6 +188,7 @@ class ClusterClovis:
         self.shipper = ClusterShipper(self)
         self.percipience = None       # per-node percipience only
         self._stats_catalog = None
+        self._manifests = None        # shared ManifestRegistry
         for node_id, domain in _node_specs(nodes):
             self.add_node(node_id, domain)
 
@@ -385,6 +391,7 @@ class ClusterClovis:
             raise IOError(f"no live replica target for {oid}")
         with self._lock:
             self._objects[oid] = container
+        self.store._emit("write", oid, {"container": container})
         self.store._notify_write(oid, arr.nbytes)
 
     def put(self, oid: str, data: bytes, container: str = "default",
@@ -405,6 +412,7 @@ class ClusterClovis:
             raise IOError(f"no live replica target for {oid}")
         with self._lock:
             self._objects[oid] = container
+        self.store._emit("write", oid, {"container": container})
         self.store._notify_write(oid, len(data))
 
     def _read_via(self, oid: str, reader) -> Any:
@@ -587,6 +595,27 @@ class ClusterClovis:
         kw.setdefault("max_workers", 4 * max(len(self.ring), 1))
         cls = engine_cls or ClusterAnalyticsEngine
         return cls(self, **kw)
+
+    @property
+    def manifests(self) -> "ManifestRegistry":
+        """Shared per-container manifest registry (see
+        ``Clovis.manifests``) — manifest objects are plain cluster
+        objects, so commits replicate K-way like any other write."""
+        from repro.compaction import ManifestRegistry
+        with self._lock:
+            if self._manifests is None:
+                self._manifests = ManifestRegistry(self)
+            return self._manifests
+
+    def compaction(self, **kw) -> "CompactionService":
+        """Log-structured compaction over the cluster (see
+        ``Clovis.compaction`` and docs/compaction.md): delta and merged
+        blocks replicate K-way, and every manifest commit is itself a
+        replicated write — a dead node never loses the container's
+        snapshot identity."""
+        from repro.compaction import CompactionService
+        kw.setdefault("catalog", self._stats_catalog)
+        return CompactionService(self, **kw)
 
     def serving(self, tenants=(), **kw) -> "QueryService":
         """Multi-tenant serving front door over the cluster: the same

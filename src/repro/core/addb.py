@@ -219,6 +219,33 @@ class Addb:
                         "ok": r.ok})
         return out
 
+    # ---- compaction trace ----
+
+    def record_compaction(self, kind: str, container: str,
+                          detail: str = "-", nbytes: int = 0,
+                          latency_s: float = 0.0, ok: bool = True):
+        """Record one compaction-subsystem event (op ``compaction``):
+        ``kind`` is append | merge | gc | recover, ``container`` the
+        manifest-managed container, ``detail`` the block oid (append /
+        merge) or a count (gc / recover).  The trace is the compactor's
+        runbook surface: merged bytes, GC churn, and crash-recovery
+        sweeps read straight out of ADDB (docs/compaction.md)."""
+        self.record("compaction", f"{kind}:{container}", detail,
+                    int(nbytes), float(latency_s), ok)
+
+    def compaction_trace(self, kind: Optional[str] = None) -> List[Dict]:
+        """Compaction records as dicts (optionally one kind), oldest
+        first: {kind, container, detail, nbytes, latency_s, ok}."""
+        out: List[Dict] = []
+        for r in self.records("compaction"):
+            k, _, container = r.entity.partition(":")
+            if kind is not None and k != kind:
+                continue
+            out.append({"kind": k, "container": container,
+                        "detail": r.device, "nbytes": r.nbytes,
+                        "latency_s": r.latency_s, "ok": r.ok})
+        return out
+
     # ---- serving front-door trace ----
 
     def record_serving(self, query: str, stage: str, tenant: str,

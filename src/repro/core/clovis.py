@@ -152,6 +152,7 @@ class Clovis:
         self._indices: Dict[str, ClovisIndex] = {}
         self.percipience = None   # set by enable_percipience
         self._stats_catalog = None   # shared by analytics() engines
+        self._manifests = None    # shared ManifestRegistry (see manifests)
         self._lock = threading.RLock()
 
     # ---- access interface: objects ----
@@ -198,6 +199,31 @@ class Clovis:
         meta.attrs.update({"dtype": _dtype_name(arr.dtype),
                            "shape": list(arr.shape), "size": len(raw)})
         self.store.write(oid, raw, txn=txn)
+
+    def append_array(self, oid: str, arr):
+        """Row-append to an existing array object through the store's
+        block-aligned append fast path, keeping the dtype/shape attrs
+        coherent (a raw ``store.append`` grows ``size`` but not
+        ``shape``, which would break ``get_array``).  The appended rows
+        must match the object's dtype and trailing dimensions."""
+        arr = np.ascontiguousarray(np.asarray(arr))
+        meta = self.store.meta(oid)
+        if meta.attrs.get("kind") != "array":
+            raise ValueError(f"{oid}: append_array needs an array object")
+        if _dtype_name(arr.dtype) != meta.attrs["dtype"]:
+            raise ValueError(
+                f"{oid}: dtype {arr.dtype} != stored {meta.attrs['dtype']}")
+        shape = list(meta.attrs["shape"])
+        if list(arr.shape[1:]) != shape[1:]:
+            raise ValueError(
+                f"{oid}: trailing dims {list(arr.shape[1:])} != "
+                f"stored {shape[1:]}")
+        # mutate attrs before the store op (the ``put`` idiom): append
+        # persists meta only after the blocks land, so a crash mid-way
+        # reopens to the old shape and the old size together
+        shape[0] += arr.shape[0]
+        meta.attrs["shape"] = shape
+        self.store.append(oid, arr.tobytes())
 
     def get_array(self, oid: str, _notify: bool = True) -> np.ndarray:
         meta = self.store.meta(oid)
@@ -262,6 +288,29 @@ class Clovis:
             kw["stats"] = self._stats_catalog
         cls = engine_cls or AnalyticsEngine
         return cls(self, **kw)
+
+    @property
+    def manifests(self) -> "ManifestRegistry":
+        """The shared per-container manifest registry — queries consult
+        it to pin snapshots; the compaction service commits through it
+        (lazy: unmanaged stacks never build one until asked)."""
+        from repro.compaction import ManifestRegistry
+        with self._lock:
+            if self._manifests is None:
+                self._manifests = ManifestRegistry(self)
+            return self._manifests
+
+    def compaction(self, **kw) -> "CompactionService":
+        """Entry point to log-structured compaction + manifest
+        snapshots (see repro.compaction and docs/compaction.md):
+        ``append_rows`` publishes immutable delta blocks behind
+        versioned manifests, a background compactor merges small runs
+        into RTHMS-placed blocks, and queries pin snapshot versions.
+        Keywords pass through to CompactionService (``policy``,
+        ``catalog``, ``auto_recover``)."""
+        from repro.compaction import CompactionService
+        kw.setdefault("catalog", self._stats_catalog)
+        return CompactionService(self, **kw)
 
     def serving(self, tenants=(), **kw) -> "QueryService":
         """Entry point to the multi-tenant query serving front door —

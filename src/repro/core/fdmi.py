@@ -13,6 +13,58 @@ from typing import Dict, List, Optional
 from repro.core.clovis import Clovis
 
 
+class AppendTracker:
+    """Compaction-trigger plugin: accumulates per-container write
+    pressure off the store's FDMI event bus.
+
+    Registered by the ``Compactor`` (``clovis.store.fdmi_register``);
+    every ``write`` event is attributed to its owning container (store
+    metadata first, ``<container>/...`` oid prefix as the fallback) and
+    ``drain()`` hands the dirty set to the next compaction pass.  The
+    compaction service also ``mark``s directly on its own append path —
+    cluster writes fan out node-locally and never traverse one store's
+    bus, so the direct mark is the trigger that always fires.
+    """
+
+    def __init__(self, store=None):
+        self.store = store
+        self._lock = threading.Lock()
+        self._dirty: Dict[str, Dict[str, int]] = {}
+
+    def __call__(self, event: str, oid: str, info: Dict):
+        if event != "write":
+            return
+        container = info.get("container")
+        if container is None and self.store is not None:
+            try:
+                container = self.store.meta(oid).container
+            except KeyError:
+                container = None
+        if container is None and "/" in oid:
+            container = oid.split("/", 1)[0]
+        if container:
+            self.mark(container, append=bool(info.get("append")))
+
+    def mark(self, container: str, nbytes: int = 0, append: bool = True):
+        with self._lock:
+            d = self._dirty.setdefault(container,
+                                       {"writes": 0, "appends": 0,
+                                        "bytes": 0})
+            d["writes"] += 1
+            d["appends"] += 1 if append else 0
+            d["bytes"] += int(nbytes)
+
+    def drain(self) -> Dict[str, Dict[str, int]]:
+        """Dirty containers since the last drain (and reset)."""
+        with self._lock:
+            out, self._dirty = self._dirty, {}
+            return out
+
+    def peek(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {c: dict(d) for c, d in self._dirty.items()}
+
+
 class IntegrityPlugin:
     """File-system-integrity-checker analogue: scrubs objects on demand
     and records checksum violations observed on the event bus."""

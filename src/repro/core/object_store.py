@@ -115,6 +115,12 @@ class ObjectStore:
             except Exception:
                 pass   # plugins must not break the store
 
+    def fdmi_emit(self, event: str, oid: str, info: Optional[Dict] = None):
+        """Publish an event from a subsystem layered above the store
+        (the compaction manifest announces ``manifest_commit`` here) —
+        the FDMI bus carries store *and* store-adjacent mutations."""
+        self._emit(event, oid, info)
+
     def register_read_hook(self, fn: Callable[[str, int], None]):
         """fn(oid, nbytes) after every demand read — the percipience
         prefetcher and feature extractor observe the access stream here.

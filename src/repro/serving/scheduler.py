@@ -189,8 +189,12 @@ class ServingMixin:
         # honest: a partial landing in (or falling out of) the
         # engine's partial cache changes the key, not the cached plan
         cached_sig = frozenset(o for o in oids if self._cache_probe(fp, o))
-        key = (getattr(ds.source, "container", "?"), fp, tuple(oids),
-               self.stats.version, cached_sig)
+        container = getattr(ds.source, "container", "?")
+        # keyed on the *container-scoped* catalog version: sustained
+        # ingest into one container re-derives only that container's
+        # plans; every other tenant's warm plans keep hitting
+        key = (container, fp, tuple(oids),
+               self.stats.container_version(container), cached_sig)
         plan = self.plan_cache.get(key)
         if plan is None:
             plan = super()._make_plan(ds, oids)

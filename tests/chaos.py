@@ -271,3 +271,252 @@ class ChaosHarness:
                 agg[f"buf_{k}"] = agg.get(f"buf_{k}", 0) + bst[k]
         agg["dead_letters"] = self.dlq.published
         return agg
+
+
+# ===========================================================================
+# compaction chaos: seeded interleavings of appends, crashing compactions,
+# snapshot-pinned reads, and whole-stack reopens (tests/test_compaction.py)
+# ===========================================================================
+
+@dataclass(frozen=True)
+class AppendRows:
+    n_rows: int
+
+
+@dataclass(frozen=True)
+class CompactNow:
+    crash_point: str = ""       # one of compactor.CRASH_POINTS, "" = clean
+
+
+@dataclass(frozen=True)
+class PinnedRead:
+    compact_under: bool = True  # run a compaction while the pin is held
+
+
+@dataclass(frozen=True)
+class Reopen:
+    pass
+
+
+CompactionAction = Union[AppendRows, CompactNow, PinnedRead, Reopen]
+
+
+def make_compaction_schedule(seed: int, *, n_actions: int = 36,
+                             p_compact: float = 0.22, p_pin: float = 0.18,
+                             p_reopen: float = 0.08, p_crash: float = 0.5
+                             ) -> List[CompactionAction]:
+    """Deterministic append/compact/pin/reopen interleaving from one
+    seed.  Roughly half the compactions are armed to crash at a random
+    crash point (``p_crash``); the schedule always opens with a few
+    appends so every interleaving exercises non-empty manifests, and
+    always ends with a clean compaction + pinned read so every seed
+    checks the steady state too.
+    """
+    from repro.compaction import CRASH_POINTS
+
+    rng = random.Random(seed)
+    actions: List[CompactionAction] = [
+        AppendRows(rng.randrange(1, 32)) for _ in range(3)]
+    for _ in range(n_actions):
+        roll = rng.random()
+        if roll < p_compact:
+            point = (rng.choice(CRASH_POINTS)
+                     if rng.random() < p_crash else "")
+            actions.append(CompactNow(point))
+        elif roll < p_compact + p_pin:
+            actions.append(PinnedRead(compact_under=rng.random() < 0.7))
+        elif roll < p_compact + p_pin + p_reopen:
+            actions.append(Reopen())
+        else:
+            actions.append(AppendRows(rng.randrange(1, 32)))
+    actions.append(CompactNow(""))
+    actions.append(PinnedRead(compact_under=False))
+    return actions
+
+
+class CompactionChaosHarness:
+    """Executes a compaction chaos schedule against a real Clovis stack
+    with a ``CompactionService`` over one on-disk root.
+
+    Ground truth is the ordered log of appended row batches
+    (``rows_log``): at any moment the container's logical content is
+    their concatenation, whatever compaction has done to the physical
+    blocks.  Crashing compactions and ``Reopen`` both rebuild the whole
+    stack (fresh ``Clovis`` + service with ``auto_recover=True``) over
+    the same directory — exactly the process-death-and-restart path.
+
+    Invariants checked as the schedule runs:
+      * reads (service and pinned analytics queries) always equal the
+        ground truth — never a half-compacted view;
+      * a snapshot pinned before a compaction reads byte-identically
+        after it;
+      * manifest versions are monotone across crashes and reopens.
+    """
+
+    SMALL_BYTES = 1 << 20       # every delta is "small": groups form fast
+
+    def __init__(self, root, *, container: str = "cevents",
+                 min_group: int = 2):
+        self.root = Path(root)
+        self.container = container
+        self.min_group = min_group
+        self.rows_log: List[np.ndarray] = []
+        self._counter = 0
+        self._armed = ""
+        self.last_version = 0
+        self.counts = {"appends": 0, "compactions": 0, "crashes": 0,
+                       "pinned_reads": 0, "reopens": 0, "recovered": 0,
+                       "queries": 0}
+        self._build_stack()
+
+    # -- stack lifecycle ----------------------------------------------
+
+    def _build_stack(self):
+        from repro.compaction import CompactionPolicy, CompactionService
+        from repro.core.addb import Addb
+        from repro.core.clovis import Clovis
+
+        self.close()                  # the old process is gone
+        self.clovis = Clovis(self.root, addb=Addb(), devices_per_tier=3)
+        self.service = CompactionService(
+            self.clovis,
+            policy=CompactionPolicy(small_bytes=self.SMALL_BYTES,
+                                    min_group=self.min_group),
+            crash_hook=self._crash_hook, auto_recover=True)
+        self.engine = self.clovis.analytics(use_kernels=False)
+        if self.service.registry.lookup(self.container) is not None:
+            self._check_version()
+
+    def close(self):
+        if getattr(self, "engine", None) is not None:
+            self.engine.close()
+            self.engine = None
+        if getattr(self, "service", None) is not None:
+            self.service.close()
+            self.service = None
+
+    def _crash_hook(self, point: str):
+        from repro.compaction import CompactorCrash
+
+        if point == self._armed:
+            raise CompactorCrash(point)
+
+    def _check_version(self):
+        v = self.service.manifest(self.container).version
+        assert v >= self.last_version, \
+            f"manifest version went backwards: {v} < {self.last_version}"
+        self.last_version = v
+
+    # -- ground truth --------------------------------------------------
+
+    def _make_rows(self, n: int) -> np.ndarray:
+        """Deterministic, globally unique rows: col0 a monotone id,
+        col1 a derived value — sortable ground truth for any seed."""
+        base = self._counter
+        self._counter += n
+        ids = np.arange(base, base + n, dtype=np.int64)
+        return np.stack([ids, ids * 7 + 1], axis=1)
+
+    @property
+    def expected(self) -> np.ndarray:
+        if not self.rows_log:
+            return np.zeros((0, 2), np.int64)
+        return np.vstack(self.rows_log)
+
+    def _assert_rows(self, got: np.ndarray, want: np.ndarray, ctx: str):
+        assert got.shape == want.shape, \
+            f"{ctx}: shape {got.shape} != {want.shape}"
+        if want.size:
+            # compaction reorders blocks (tier/heat schedule) but must
+            # preserve the row multiset; col0 is unique so one sort
+            # fixes an order to compare exactly
+            g = got[np.argsort(got[:, 0])]
+            w = want[np.argsort(want[:, 0])]
+            assert (g == w).all(), f"{ctx}: row content diverged"
+
+    # -- actions -------------------------------------------------------
+
+    def run(self, actions: List[CompactionAction]) -> Dict[str, int]:
+        for a in actions:
+            if isinstance(a, AppendRows):
+                self._append(a)
+            elif isinstance(a, CompactNow):
+                self._compact(a)
+            elif isinstance(a, PinnedRead):
+                self._pinned_read(a)
+            elif isinstance(a, Reopen):
+                self._reopen()
+            else:                     # pragma: no cover - schedule bug
+                raise TypeError(f"unknown compaction action {a!r}")
+        self._verify()
+        return dict(self.counts)
+
+    def _append(self, a: AppendRows):
+        rows = self._make_rows(a.n_rows)
+        self.service.append_rows(self.container, rows)
+        self.rows_log.append(rows)
+        self.counts["appends"] += 1
+        self._check_version()
+
+    def _compact(self, a: CompactNow):
+        from repro.compaction import CompactorCrash
+
+        self._armed = a.crash_point
+        try:
+            self.service.compact(self.container)
+            self.counts["compactions"] += 1
+        except CompactorCrash:
+            self.counts["crashes"] += 1
+            # the compactor process died mid-merge: restart everything
+            # over the same root; auto_recover sweeps any orphan block
+            self._armed = ""
+            self._build_stack()
+        finally:
+            self._armed = ""
+        self._check_version()
+        self._verify()
+
+    def _pinned_read(self, a: PinnedRead):
+        snap = self.service.pin(self.container)
+        try:
+            before = self.service.read_rows(self.container, snapshot=snap)
+            self._assert_rows(before, self.expected, "pinned read")
+            if a.compact_under:
+                # more ingest + a full compaction while the pin is held:
+                # the pinned view must stay BYTE-identical, not just
+                # content-equal — old blocks outlive the pin (GC floor)
+                self._append(AppendRows(5))
+                self.service.compact(self.container)
+                self.counts["compactions"] += 1
+            after = self.service.read_rows(self.container, snapshot=snap)
+            assert before.shape == after.shape and (before == after).all(), \
+                "pinned snapshot changed under compaction"
+        finally:
+            self.service.unpin(snap)
+        self.counts["pinned_reads"] += 1
+
+    def _reopen(self):
+        self._build_stack()
+        self.counts["reopens"] += 1
+        self._verify()
+
+    # -- invariants ----------------------------------------------------
+
+    def _verify(self):
+        self._assert_rows(self.service.read_rows(self.container),
+                          self.expected, "service read")
+        self._query_check()
+
+    def _query_check(self):
+        """Snapshot-pinned analytics query vs ground-truth aggregate."""
+        from repro.analytics import col
+
+        want = self.expected
+        if not want.size:
+            return
+        ds = self.engine.scan(self.container).aggregate(
+            "sum", value=col(1))
+        res = self.engine.run(ds)
+        assert res.stats.snapshot_version == self.last_version
+        assert int(res.value) == int(want[:, 1].sum())
+        self.counts["queries"] += 1

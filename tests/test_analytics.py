@@ -25,19 +25,7 @@ def engine(sage):
     eng.close()
 
 
-def _events(sage, n_objects=4, rows=256, seed=0, container="events"):
-    """Container of (key, filter, value, part) int32 row tables."""
-    rng = np.random.default_rng(seed)
-    arrs = []
-    for i in range(n_objects):
-        a = np.empty((rows, 4), np.int32)
-        a[:, 0] = rng.integers(0, 7, rows)
-        a[:, 1] = rng.integers(0, 100, rows)
-        a[:, 2] = rng.integers(-40, 40, rows)
-        a[:, 3] = i
-        sage.put_array(f"{container}/{i:02d}", a, container=container)
-        arrs.append(a)
-    return np.vstack(arrs)
+from conftest import make_events as _events  # noqa: E402  (shared factory)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,374 @@
+"""Compaction subsystem gauntlet: manifest persistence + reopen,
+append/query parity through snapshot-pinned executors, merge + RTHMS
+tier placement, pin-blocks-GC, FDMI-triggered passes, crash-point
+atomicity (byte-identical reopened reads), orphan recovery, seeded
+append/compact/pin/reopen interleavings, the per-container cache
+invalidation regressions, and manifest replication on the cluster."""
+import os
+
+import numpy as np
+import pytest
+
+from chaos import CompactionChaosHarness, make_compaction_schedule
+from repro.analytics import col
+from repro.compaction import (CRASH_POINTS, CompactionPolicy,
+                              CompactionService, CompactorCrash,
+                              ContainerManifest, ManifestCorruption,
+                              manifest_oid)
+from repro.serving import ServingEngine
+
+SEEDS = [int(s) for s in
+         os.environ.get("SAGE_CHAOS_SEEDS", "7").split(",") if s.strip()]
+
+# every delta is "small" so two suffice to form a merge group
+POLICY = CompactionPolicy(small_bytes=1 << 20, min_group=2)
+
+
+def _service(sage, **kw):
+    kw.setdefault("policy", POLICY)
+    return sage.compaction(**kw)
+
+
+def _rows(n, base=0):
+    ids = np.arange(base, base + n, dtype=np.int64)
+    return np.stack([ids, ids * 7 + 1], axis=1)
+
+
+def _fill(svc, container="c", batches=6, per=8):
+    batches_out = []
+    for i in range(batches):
+        rows = _rows(per, base=i * per)
+        svc.append_rows(container, rows)
+        batches_out.append(rows)
+    return np.vstack(batches_out)
+
+
+def _reopen(tmp_path, **kw):
+    """Fresh stack over the same on-disk root (the restart path)."""
+    from repro.core.addb import Addb
+    from repro.core.clovis import Clovis
+
+    clovis = Clovis(tmp_path / "sage", addb=Addb(), devices_per_tier=3)
+    kw.setdefault("policy", POLICY)
+    return clovis, clovis.compaction(**kw)
+
+
+# ---------------------------------------------------------------------------
+# manifest: commits, persistence, reopen, corruption
+# ---------------------------------------------------------------------------
+
+def test_manifest_versions_commit_and_reopen(sage, tmp_path):
+    svc = _service(sage)
+    want = _fill(svc, batches=3)
+    m = svc.manifest("c")
+    assert m.version == 3
+    assert m.versions() == [1, 2, 3]
+    assert m.snapshot().rows == want.shape[0]
+
+    _, svc2 = _reopen(tmp_path)
+    m2 = svc2.manifest("c")
+    assert m2.version == 3
+    assert [e.oid for e in m2.snapshot().entries] == \
+        [e.oid for e in m.snapshot().entries]
+    assert np.array_equal(svc2.read_rows("c"), want)
+
+
+def test_manifest_snapshot_at_prefix_views(sage):
+    svc = _service(sage)
+    batches = [_rows(4, base=4 * i) for i in range(4)]
+    for b in batches:
+        svc.append_rows("c", b)
+    m = svc.manifest("c")
+    assert m.snapshot_at(0).entries == ()
+    for v in range(1, 5):
+        snap = m.snapshot_at(v)
+        assert np.array_equal(svc.read_rows("c", snapshot=snap),
+                              np.vstack(batches[:v]))
+    with pytest.raises(KeyError):
+        m.snapshot_at(99)
+
+
+def test_manifest_torn_tail_recovers_previous_version(sage):
+    svc = _service(sage)
+    _fill(svc, batches=3)
+    oid = manifest_oid("c")
+    raw = sage.get(oid)
+    sage.put(oid, raw[:-5])           # crash mid-write of the last line
+    m = ContainerManifest(sage, "c")
+    assert m.torn_tail_recovered == 1
+    assert m.version == 2             # the last durable commit
+
+
+def test_manifest_mid_file_damage_raises(sage):
+    svc = _service(sage)
+    _fill(svc, batches=3)
+    oid = manifest_oid("c")
+    lines = sage.get(oid).decode().splitlines(keepends=True)
+    lines[0] = lines[0][:12] + "X" + lines[0][13:]
+    sage.put(oid, "".join(lines).encode())
+    with pytest.raises(ManifestCorruption):
+        ContainerManifest(sage, "c")
+
+
+# ---------------------------------------------------------------------------
+# write/read path: parity, snapshot-pinned queries, append_array
+# ---------------------------------------------------------------------------
+
+def test_append_rows_query_parity_and_pinning(sage):
+    eng = sage.analytics(use_kernels=False)
+    svc = _service(sage)
+    want = _fill(svc, batches=5)
+    ds = eng.scan("c").aggregate("sum", value=col(1))
+    res = eng.run(ds)
+    assert int(res.value) == int(want[:, 1].sum())
+    assert res.stats.snapshot_version == 5      # pinned the live manifest
+    assert res.stats.partitions == 5            # one per delta block
+
+    # unmanaged containers are untouched by the subsystem: no pin
+    sage.put_array("plain/0", want.astype(np.int32), container="plain")
+    res2 = eng.run(eng.scan("plain").aggregate("count"))
+    assert res2.stats.snapshot_version == -1
+    eng.close()
+
+
+def test_append_array_grows_shape_coherently(sage):
+    a, b = _rows(4), _rows(3, base=4)
+    sage.put_array("t/a", a, container="t")
+    sage.append_array("t/a", b)
+    assert np.array_equal(sage.get_array("t/a"), np.vstack([a, b]))
+    with pytest.raises(ValueError):
+        sage.append_array("t/a", b.astype(np.int32))   # dtype mismatch
+    with pytest.raises(ValueError):
+        sage.append_array("t/a", np.zeros((2, 5), np.int64))  # width
+
+
+# ---------------------------------------------------------------------------
+# compaction: merging, tier placement, GC vs pins, FDMI trigger
+# ---------------------------------------------------------------------------
+
+def test_compact_merges_small_runs_and_places_tier(sage):
+    svc = _service(sage)
+    want = _fill(svc, batches=6)
+    report = svc.compact("c")["c"]
+    assert report.groups == 1
+    assert report.blocks_in == 6 and report.blocks_out == 1
+    snap = svc.manifest("c").snapshot()
+    assert len(snap.entries) == 1
+    assert snap.entries[0].gen == 1             # merge generation bumped
+    meta = sage.store.meta(snap.entries[0].oid)
+    assert meta.layout.tier in report.tiers     # RTHMS-recommended tier
+    assert np.array_equal(svc.read_rows("c"), want)
+    # compacting an already-compacted container is a no-op
+    assert svc.compact("c")["c"].groups == 0
+
+
+def test_pinned_snapshot_blocks_gc_until_unpin(sage):
+    svc = _service(sage)
+    want = _fill(svc, batches=4)
+    pin = svc.pin("c")
+    old_oids = pin.oids
+    svc.compact("c")                            # rewrites under the pin
+    assert all(sage.exists(o) for o in old_oids)
+    assert np.array_equal(svc.read_rows("c", snapshot=pin), want)
+    assert svc.gc("c") == []                    # the pin holds the floor
+    svc.unpin(pin)
+    assert sorted(svc.gc("c")) == sorted(old_oids)
+    assert not any(sage.exists(o) for o in old_oids)
+
+
+def test_fdmi_tracker_attributes_writes_and_run_once_skips_unmanaged(sage):
+    svc = _service(sage)
+    _fill(svc, batches=4)
+    svc.compact("c")                            # settle the dirty set
+    svc.compactor.tracker.drain()
+    # a plain store write lands on the FDMI bus and is attributed...
+    sage.put_array("other/0", _rows(4), container="other")
+    assert "other" in svc.compactor.tracker.peek()
+    # ...but run_once skips unmanaged containers; a managed append
+    # marks its container dirty and gets compacted
+    for i in range(2):
+        svc.append_rows("c", _rows(4, base=100 + 4 * i))
+    reports = svc.compactor.run_once()
+    assert "other" not in reports
+    assert reports["c"].blocks_in >= 2
+
+
+def test_addb_traces_compaction_ops(sage):
+    svc = _service(sage)
+    _fill(svc, batches=4)
+    svc.compact("c")
+    kinds = {t["kind"] for t in sage.addb.compaction_trace()}
+    assert {"append", "merge"} <= kinds
+    assert all(t["container"] == "c"
+               for t in sage.addb.compaction_trace("merge"))
+
+
+# ---------------------------------------------------------------------------
+# crash gauntlet: kill the compactor at every point, reopen, verify
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_crash_mid_merge_reopens_byte_identical(sage, tmp_path, point):
+    armed = {"at": point}
+
+    def hook(p):
+        if p == armed["at"]:
+            raise CompactorCrash(p)
+
+    svc = _service(sage, crash_hook=hook)
+    want = _fill(svc, batches=8)
+    with pytest.raises(CompactorCrash):
+        svc.compact("c")
+
+    # the process is gone; a fresh stack reopens and auto-recovers
+    clovis2, svc2 = _reopen(tmp_path)
+    m = svc2.manifest("c")
+    assert np.array_equal(svc2.read_rows("c"), want)   # byte-identical
+    if point == "after_commit":
+        # the flip landed: merged block is live, deltas awaiting GC
+        assert m.version == 9
+        assert len(m.snapshot().entries) == 1
+    else:
+        # the flip never landed: old manifest intact, orphan swept
+        assert m.version == 8
+        assert len(m.snapshot().entries) == 8
+        assert not [o for o in clovis2.container("c") if "/blk-" in o]
+    # and the reopened stack can carry on compacting cleanly
+    svc2.compact("c")
+    assert np.array_equal(svc2.read_rows("c"), want)
+
+
+def test_recover_deletes_planted_orphan(sage):
+    svc = _service(sage)
+    _fill(svc, batches=2)
+    orphan = "c/blk-99999999"
+    sage.put_array(orphan, _rows(4), container="c")
+    assert svc.recover("c") == 1
+    assert not sage.exists(orphan)
+    assert svc.manifest("c").version == 2       # recovery never commits
+
+
+# ---------------------------------------------------------------------------
+# seeded interleave gauntlet
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_interleaved_chaos_gauntlet(tmp_path, seed):
+    h = CompactionChaosHarness(tmp_path / "chaos")
+    try:
+        counts = h.run(make_compaction_schedule(seed))
+    finally:
+        h.close()
+    assert counts["appends"] >= 3
+    assert counts["compactions"] >= 1
+    assert counts["pinned_reads"] >= 1
+    assert counts["queries"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# invalidation regressions: appends must stay per-container/per-block
+# ---------------------------------------------------------------------------
+
+def test_sibling_append_leaves_catalog_and_partials_alone(sage):
+    eng = sage.analytics(use_kernels=False)
+    svc = _service(sage)
+    _fill(svc, container="a", batches=3)
+    wb = _fill(svc, container="b", batches=3)
+
+    ds = eng.scan("b").filter(col(0) >= 0).aggregate("sum", value=col(1))
+    eng.run(ds)                                  # warm partials for b
+    warmed = {k for k in eng._partial_cache if k[1].startswith("b/")}
+    assert warmed
+    vb = eng.stats.container_version("b")
+
+    svc.append_rows("a", _rows(8, base=1000))    # touch ONLY container a
+    assert eng.stats.container_version("a") > 0
+    assert eng.stats.container_version("b") == vb
+    assert warmed <= set(eng._partial_cache)     # b's partials survived
+
+    res = eng.run(ds)
+    assert res.stats.cache_hits == 3             # all served from cache
+    assert int(res.value) == int(wb[:, 1].sum())
+    eng.close()
+
+
+def test_sibling_append_keeps_serving_plans_warm(sage):
+    eng = sage.analytics(engine_cls=ServingEngine, use_kernels=False)
+    svc = _service(sage)
+    _fill(svc, container="a", batches=3)
+    _fill(svc, container="b", batches=3)
+
+    ds = eng.scan("b").aggregate("count")
+    eng.run(ds)               # miss: cold plan
+    eng.run(ds)               # miss: cached-partition signature changed
+    eng.run(ds)               # hit: warm
+    hits = eng.plan_cache.stats()["hits"]
+    assert hits >= 1
+
+    svc.append_rows("a", _rows(8, base=1000))    # sustained ingest on a
+    eng.run(ds)
+    assert eng.plan_cache.stats()["hits"] == hits + 1   # b stayed warm
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# cluster: replicated manifests, compaction + failover
+# ---------------------------------------------------------------------------
+
+def test_cluster_manifests_replicate_and_survive_node_loss(tmp_path):
+    from repro.cluster import ClusterClovis
+
+    cluster = ClusterClovis(tmp_path / "cluster", nodes=4, replicas=2)
+    try:
+        svc = cluster.compaction(policy=POLICY)
+        want = _fill(svc, batches=6)
+        assert len(cluster.live_holders(manifest_oid("c"))) == 2
+        for e in svc.manifest("c").snapshot().entries:
+            assert len(cluster.live_holders(e.oid)) == 2
+
+        report = svc.compact("c")["c"]
+        assert report.blocks_out == 1
+        eng = cluster.analytics(use_kernels=False)
+        res = eng.run(eng.scan("c").aggregate("count"))
+        assert int(res.value) == want.shape[0]
+        assert res.stats.snapshot_version == svc.manifest("c").version
+        eng.close()
+
+        victim = cluster.live_holders(manifest_oid("c"))[0].node_id
+        cluster.kill_node(victim)
+        assert np.array_equal(
+            np.sort(svc.read_rows("c"), axis=0), np.sort(want, axis=0))
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# shared-fixture coverage: DHT overflow + EdgeBuffer prune
+# ---------------------------------------------------------------------------
+
+def test_dht_overflow_heap_full_raises(dht_factory):
+    dht = dht_factory(n_buckets=4, heap=2)
+    # distinct keys, same bucket (mod 4): 1 lands, 2 overflow, 4th raises
+    keys = (np.uint64(5) + np.uint64(4) * np.arange(8, dtype=np.uint64))
+    vals = np.arange(1, 9, dtype=np.uint64)
+    with pytest.raises(IOError, match="overflow heap full"):
+        dht.put(keys, vals)
+
+
+def test_edge_buffer_prune_drops_only_fully_acked_segments(
+        edge_buffer_factory):
+    buf = edge_buffer_factory(segment_bytes=128)
+    recs = [buf.append("s0", bytes(48) + bytes([i])) for i in range(8)]
+    assert buf.prune() == 0                      # nothing acked yet
+    for r in recs[:-1]:
+        buf.ack(r.event_id)
+    removed = buf.prune()
+    assert removed >= 1                          # fully-acked segments go
+    left = {r.event_id for r in buf.replay()}
+    assert recs[-1].event_id in left             # the unacked record stays
+    buf.ack(recs[-1].event_id)
+    buf.prune()
+    # the newest segment is never pruned (it anchors next_event_id),
+    # so the tail records remain durable and replayable
+    assert recs[-1].event_id in {r.event_id for r in buf.replay()}
+    assert buf.stats["pruned_segments"] >= removed

@@ -1,0 +1,126 @@
+"""Hypothesis property tests on the compaction invariants: compaction
+preserves the record multiset whatever the append/compact interleaving,
+manifest versions are monotone across reopens, and replaying any prefix
+of manifest versions yields the exact prefix of the logical content.
+Skipped wholesale when hypothesis is not installed so the rest of the
+suite still collects and runs."""
+import itertools
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.compaction import CompactionPolicy
+
+_DIR = itertools.count()
+
+# a plan is a sequence of appends (batch sizes) and compactions (None)
+_plans = st.lists(
+    st.one_of(st.integers(1, 24), st.none()), min_size=1, max_size=16)
+
+
+def _stack(tmp_path, min_group=2):
+    from repro.core.addb import Addb
+    from repro.core.clovis import Clovis
+
+    clovis = Clovis(tmp_path / f"prop{next(_DIR)}", addb=Addb(),
+                    devices_per_tier=3)
+    svc = clovis.compaction(
+        policy=CompactionPolicy(small_bytes=1 << 20, min_group=min_group),
+        auto_recover=False)
+    return clovis, svc
+
+
+def _reopen(clovis):
+    from repro.core.addb import Addb
+    from repro.core.clovis import Clovis
+
+    fresh = Clovis(clovis.store.root.parent, addb=Addb(),
+                   devices_per_tier=3)
+    return fresh, fresh.compaction(
+        policy=CompactionPolicy(small_bytes=1 << 20, min_group=2),
+        auto_recover=True)
+
+
+def _rows(n, base):
+    ids = np.arange(base, base + n, dtype=np.int64)
+    return np.stack([ids, ids * 3 - 5], axis=1)
+
+
+def _run_plan(svc, plan, container="c"):
+    """Execute a plan; returns the ordered ground-truth rows."""
+    log, base = [], 0
+    for step in plan:
+        if step is None:
+            if log:                       # compact only once non-empty
+                svc.compact(container)
+        else:
+            rows = _rows(step, base)
+            base += step
+            svc.append_rows(container, rows)
+            log.append(rows)
+    return np.vstack(log) if log else np.zeros((0, 2), np.int64)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(plan=_plans, min_group=st.integers(2, 5))
+def test_compaction_preserves_record_multiset(tmp_path, plan, min_group):
+    _, svc = _stack(tmp_path, min_group=min_group)
+    want = _run_plan(svc, plan)
+    got = svc.read_rows("c")
+    if not want.size:
+        assert not got.size
+        return
+    # read_rows follows manifest order, which compaction preserves —
+    # the content is not just the same multiset but the same sequence
+    assert np.array_equal(got, want)
+    assert svc.manifest("c").snapshot().rows == want.shape[0]
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(plan=_plans, cuts=st.integers(1, 3))
+def test_versions_monotone_across_reopens(tmp_path, plan, cuts):
+    clovis, svc = _stack(tmp_path)
+    per = max(1, len(plan) // (cuts + 1))
+    seen = [0]
+    for i in range(0, len(plan), per):
+        _run_plan(svc, plan[i:i + per])
+        if any(s is not None for s in plan[:i + per]):
+            seen.append(svc.manifest("c").version)
+        clovis, svc = _reopen(clovis)     # process restart mid-plan
+        if svc.registry.lookup("c") is not None:
+            seen.append(svc.manifest("c").version)
+    assert seen == sorted(seen)           # never goes backwards
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(batches=st.lists(st.integers(1, 16), min_size=1, max_size=10))
+def test_version_prefix_replay_is_consistent(tmp_path, batches):
+    """Before any compaction, manifest version v IS the first v appends:
+    snapshot_at(v) must replay exactly that prefix, for every v."""
+    _, svc = _stack(tmp_path)
+    log, base = [], 0
+    for n in batches:
+        rows = _rows(n, base)
+        base += n
+        svc.append_rows("c", rows)
+        log.append(rows)
+    m = svc.manifest("c")
+    assert m.versions() == list(range(1, len(batches) + 1))
+    for v in [0] + m.versions():
+        snap = m.snapshot_at(v)
+        want = (np.vstack(log[:v]) if v else np.zeros((0, 2), np.int64))
+        got = svc.read_rows("c", snapshot=snap)
+        assert got.shape[0] == want.shape[0]
+        if want.size:
+            assert np.array_equal(got, want)
+    # after compaction the live view still equals the full prefix
+    svc.compact("c")
+    assert np.array_equal(svc.read_rows("c"), np.vstack(log))

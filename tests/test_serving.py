@@ -24,18 +24,11 @@ COUNT = {"op": "aggregate", "agg": "count"}
 SUM1 = {"op": "aggregate", "agg": "sum", "value": {"t": "col", "i": 1}}
 
 
-def _events(sage, n_objects=4, rows=256, seed=0, container="events"):
-    rng = np.random.default_rng(seed)
-    arrs = []
-    for i in range(n_objects):
-        a = np.empty((rows, 4), np.int32)
-        a[:, 0] = rng.integers(-50, 50, rows)
-        a[:, 1] = rng.integers(0, 100, rows)
-        a[:, 2] = rng.integers(-40, 40, rows)
-        a[:, 3] = i
-        sage.put_array(f"{container}/{i:02d}", a, container=container)
-        arrs.append(a)
-    return np.vstack(arrs)
+import functools  # noqa: E402
+
+from conftest import make_events  # noqa: E402  (shared factory)
+
+_events = functools.partial(make_events, key_range=(-50, 50))
 
 
 @pytest.fixture()
