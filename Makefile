@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench bench-percipience bench-analytics bench-streaming \
         bench-dht bench-cluster bench-edge bench-serving \
-        bench-compaction docs-check
+        bench-compaction bench-kernels docs-check
 
 # tier-1 verify (ROADMAP.md); CI adds PYTEST_EXTRA="--timeout=120"
 # (pytest-timeout is in requirements-dev, not assumed locally)
@@ -48,3 +48,9 @@ bench-serving:
 # (writes results/BENCH_compaction.json)
 bench-compaction:
 	$(PYTHON) -m benchmarks.run --only compaction
+
+# fused filter->aggregate kernel vs unfused mask-then-reduce, compiled
+# (non-interpret) timings: >= 1.5x, byte-identical int aggregates
+# (writes results/BENCH_kernels.json)
+bench-kernels:
+	$(PYTHON) -m benchmarks.run --only kernels

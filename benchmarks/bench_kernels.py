@@ -1,0 +1,166 @@
+"""Kernel micro-benchmark — *compiled* timings for the fused
+filter→segmented-reduce kernel vs the unfused mask-then-reduce path.
+
+This is the real timing harness ISSUE's tentpole asks for: everything
+timed here runs through the compiled dispatch (``kernel_mode(False)`` —
+the Pallas TPU kernel when a TPU is attached, an honest jit-compiled
+XLA kernel on CPU), never the Pallas interpreter.  Interpreter numbers
+are reported separately and labelled ``interpret`` so they can't be
+mistaken for silicon.
+
+Workload mirrors the analytics skewed-selectivity benchmark: int32
+row blocks where half the partitions pass the predicate entirely and
+half pass nothing, filter ``col1 >= 50``, group by ``col2`` into 16
+dense segments, sum ``col1``.
+
+  * ``fused``    — one ``fused_filter_aggregate`` pass: predicate +
+    fold into segment accumulators, no materialised mask.
+  * ``unfused``  — what the unfused interpreter does: numpy mask
+    materialisation, row compaction, then the compiled
+    ``segment_reduce`` kernel over the survivors.
+
+Asserts (strict mode) that the fused path is >= 1.5x the unfused
+throughput and byte-identical on the integer aggregate, then writes
+``results/BENCH_kernels.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.analytics import kernels as K
+
+N_SEGMENTS = 16
+
+
+def _skewed_columns(rows: int, seed: int = 0) -> Dict[int, np.ndarray]:
+    """Half the rows all-pass (col1 in [50,100)), half none-pass —
+    the per-block skew bench_analytics uses, flattened to one batch."""
+    rng = np.random.default_rng(seed)
+    half = rows // 2
+    c1 = np.concatenate([rng.integers(50, 100, half),
+                         rng.integers(0, 50, rows - half)]).astype(np.int32)
+    c2 = rng.integers(0, N_SEGMENTS, rows).astype(np.int32)
+    return {1: c1, 2: c2}
+
+
+_PRED = {"t": "bin", "op": ">=",
+         "l": {"t": "col", "i": 1}, "r": {"t": "lit", "v": 50}}
+_VALUE = {"t": "col", "i": 1}
+
+
+def _fused_once(cols, ids, interpret: bool):
+    return K.fused_filter_aggregate(cols, _PRED, _VALUE, ids, N_SEGMENTS,
+                                    op="sum", interpret=interpret)
+
+
+def _unfused_once(cols, ids, interpret: bool):
+    """Mask-then-reduce: materialise the boolean mask, compact the
+    survivors (two full passes + a copy), then the compiled segment
+    kernel — the unfused interpreter's data path."""
+    keep = cols[1] >= 50
+    vals = cols[1][keep]
+    sids = ids[keep]
+    return K.segment_reduce(vals, sids, N_SEGMENTS, op="sum",
+                            interpret=interpret)
+
+
+def _bench_mode(rows: int, repeats: int, interpret: bool) -> Dict:
+    mode = K.kernel_mode(interpret)
+    cols = _skewed_columns(rows)
+    ids = cols[2]
+
+    acc, cnt = _fused_once(cols, ids, interpret)
+    unf = _unfused_once(cols, ids, interpret)
+    ref = K.segment_reduce_ref(cols[1][cols[1] >= 50],
+                               ids[cols[1] >= 50], N_SEGMENTS, op="sum")
+    identical = (np.array_equal(np.asarray(acc), np.asarray(unf))
+                 and np.array_equal(np.asarray(unf), ref))
+
+    tf = timeit(lambda: _fused_once(cols, ids, interpret),
+                repeats=repeats, warmup=2)
+    tu = timeit(lambda: _unfused_once(cols, ids, interpret),
+                repeats=repeats, warmup=2)
+    speedup = tu["min_s"] / max(tf["min_s"], 1e-12)
+    emit(f"kernels_fused_{mode}", tf["min_s"] * 1e6,
+         f"rows={rows} segments={N_SEGMENTS}")
+    emit(f"kernels_unfused_{mode}", tu["min_s"] * 1e6,
+         f"rows={rows} segments={N_SEGMENTS}")
+    emit(f"kernels_fused_speedup_{mode}", 0.0,
+         f"speedup={speedup:.2f}x byte_identical={int(identical)}")
+    return {"mode": mode, "rows": rows, "segments": N_SEGMENTS,
+            "fused_us": tf["min_s"] * 1e6, "unfused_us": tu["min_s"] * 1e6,
+            "fused_mean_us": tf["mean_s"] * 1e6,
+            "unfused_mean_us": tu["mean_s"] * 1e6,
+            "speedup": speedup, "byte_identical": bool(identical)}
+
+
+def _bench_tiling_edges(interpret: bool) -> List[Dict]:
+    """Compiled timings at awkward row counts (not multiples of the
+    8x128 tile) — correctness is the tests' job; here we check the
+    padding path doesn't fall off a cliff."""
+    out = []
+    mode = K.kernel_mode(interpret)
+    for rows in (1_000, 4_097, 65_521):
+        cols = _skewed_columns(rows, seed=rows)
+        ids = cols[2]
+        t = timeit(lambda: _fused_once(cols, ids, interpret),
+                   repeats=3, warmup=1)
+        emit(f"kernels_fused_rows{rows}_{mode}", t["min_s"] * 1e6, "")
+        out.append({"mode": mode, "rows": rows,
+                    "fused_us": t["min_s"] * 1e6})
+    return out
+
+
+def run(rows: int = 1 << 20, repeats: int = 5, smoke: bool = False,
+        strict: bool = True) -> Dict:
+    if smoke:
+        rows, repeats, strict = 1 << 16, 3, False
+    K.kernel_cache_clear()
+
+    compiled = _bench_mode(rows, repeats, interpret=False)
+    edges = _bench_tiling_edges(interpret=False)
+
+    # retrace check: every shape above compiled once; re-running the
+    # headline shape must hit the jitted-closure cache
+    before = K.kernel_cache_info()
+    _fused_once(_skewed_columns(rows), _skewed_columns(rows)[2], False)
+    after = K.kernel_cache_info()
+    cache_hit = after["hits"] > before["hits"] \
+        and after["entries"] == before["entries"]
+    emit("kernels_closure_cache", 0.0,
+         f"entries={after['entries']} hits={after['hits']} "
+         f"reuse={int(cache_hit)}")
+
+    # interpreter numbers for scale only — labelled, never the headline
+    interp = None
+    if not smoke:
+        interp = _bench_mode(1 << 14, 2, interpret=True)
+
+    result = {"compiled": compiled, "tiling_edges": edges,
+              "interpret": interp,
+              "cache": after, "cache_reuse": bool(cache_hit),
+              "backend": K.kernel_mode(False)}
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    path = out / "BENCH_kernels.json"
+    path.write_text(json.dumps(result, indent=2))
+    emit("kernels_bench_json", 0.0, str(path))
+
+    if not compiled["byte_identical"]:
+        raise AssertionError("fused aggregate != unfused mask-then-reduce")
+    if strict and compiled["speedup"] < 1.5:
+        raise AssertionError(
+            f"fused speedup {compiled['speedup']:.2f}x < 1.5x over "
+            f"unfused mask-then-reduce ({compiled['mode']})")
+    if strict and not cache_hit:
+        raise AssertionError("kernel closure cache missed on a repeat call")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -53,9 +53,42 @@ def breakdown(hlo_text: str, top: int = 18) -> Dict[str, int]:
     return dict(by_op)
 
 
+def kernel_breakdown(name: str, rows: int, segments: int):
+    """Lower an analytics kernel's compiled (non-interpret) XLA program
+    and run the byte breakdown on it — shows whether the fused pass
+    actually avoided the materialised mask/compact intermediates."""
+    import numpy as np
+    import jax
+    from repro.analytics import kernels as K
+
+    rows = rows - rows % K._TILE or K._TILE
+    ids = np.zeros(rows, np.int32)
+    c1 = np.ones(rows, np.int32)
+    c2 = np.zeros(rows, np.int32)
+    pred = '{"l": {"i": 1, "t": "col"}, "op": ">=", ' \
+           '"r": {"t": "lit", "v": 50}, "t": "bin"}'
+    value = '{"i": 1, "t": "col"}'
+    if name == "fused":
+        fn = K._fused_xla_call("sum", "int32", segments, pred, value, (1, 2))
+        comp = jax.jit(fn).lower(ids, c1, c2).compile()
+    elif name == "segment":
+        fn = K._xla_segment_call("sum", "int32", segments)
+        comp = jax.jit(fn).lower(c1, ids).compile()
+    else:
+        raise SystemExit(f"unknown kernel {name!r} (fused|segment)")
+    print(f"kernel={name} rows={rows} segments={segments} "
+          f"mode={K.kernel_mode(False)}")
+    breakdown(comp.as_text())
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--kernel", default=None, metavar="NAME",
+                    help="break down an analytics kernel (fused|segment) "
+                         "instead of a model cell")
+    ap.add_argument("--rows", type=int, default=1 << 20)
+    ap.add_argument("--segments", type=int, default=16)
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--attn", default="auto")
     ap.add_argument("--layers", type=int, default=None,
@@ -65,6 +98,12 @@ def main():
     ap.add_argument("--serving-spec", action="store_true")
     ap.add_argument("--no-fsdp", action="store_true")
     args = ap.parse_args()
+
+    if args.kernel:
+        kernel_breakdown(args.kernel, args.rows, args.segments)
+        return
+    if args.arch is None:
+        ap.error("--arch is required (or use --kernel)")
 
     import jax
     from repro.launch.dryrun import build_cell

@@ -104,11 +104,53 @@ def summarize(rows: List[Dict]) -> str:
     return "\n".join(lines)
 
 
+def render_kernels(path: str) -> str:
+    """Kernel micro-bench table from results/BENCH_kernels.json: the
+    fused filter->aggregate pass vs unfused mask-then-reduce, with the
+    effective streaming bandwidth each achieved (rows x 3 int32 columns
+    cross memory once in the fused pass)."""
+    with open(path) as f:
+        data = json.load(f)
+    lines = ["| path | backend | rows | time | eff. bandwidth | speedup |",
+             "|" + "---|" * 6]
+
+    def row(tag: str, r: Dict, speedup: str):
+        nbytes = r["rows"] * 3 * 4           # ids + filter col + value col
+        bw = nbytes / (r["fused_us"] * 1e-6 if tag == "fused"
+                       else r["unfused_us"] * 1e-6) / 1e9
+        us = r["fused_us"] if tag == "fused" else r["unfused_us"]
+        lines.append(f"| {tag} | {r['mode']} | {r['rows']} | "
+                     f"{fmt_seconds(us * 1e-6)} | {bw:.1f} GB/s | "
+                     f"{speedup} |")
+
+    for key in ("compiled", "interpret"):
+        r = data.get(key)
+        if not r:
+            continue
+        row("fused", r, f"{r['speedup']:.2f}x")
+        row("unfused", r, "1.00x")
+    lines.append(f"\nbyte_identical={data['compiled']['byte_identical']} "
+                 f"cache_reuse={data.get('cache_reuse')} "
+                 f"backend={data.get('backend')}")
+    for e in data.get("tiling_edges") or []:
+        lines.append(f"  edge rows={e['rows']}: "
+                     f"{fmt_seconds(e['fused_us'] * 1e-6)} ({e['mode']})")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--in", dest="inp", required=True)
+    ap.add_argument("--in", dest="inp", default=None)
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--kernels", default=None, metavar="JSON",
+                    help="render the kernel micro-bench table from "
+                         "results/BENCH_kernels.json instead of dry-run rows")
     args = ap.parse_args()
+    if args.kernels:
+        print(render_kernels(args.kernels))
+        return
+    if args.inp is None:
+        ap.error("--in is required (or use --kernels)")
     rows = load_rows(args.inp)
     print(render(rows, args.markdown))
     print()

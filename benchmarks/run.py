@@ -5,8 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run [--only stream|dht|checkpoint|
                                              streams|clovis|percipience|
                                              analytics|streaming|cluster|
-                                             edge|serving|compaction]
-                                            [--quick]
+                                             edge|serving|compaction|
+                                             kernels]
+                                            [--quick] [--smoke]
 """
 from __future__ import annotations
 
@@ -23,12 +24,16 @@ def main() -> None:
                          "drift from what actually runs)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes for CI-speed runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + no perf assertions (CI bench-smoke "
+                         "job: proves the harness runs and emits JSON)")
     args = ap.parse_args()
 
     from benchmarks import (bench_analytics, bench_checkpoint, bench_clovis,
                             bench_cluster, bench_compaction, bench_dht,
-                            bench_edge, bench_percipience, bench_serving,
-                            bench_stream_windows, bench_streams)
+                            bench_edge, bench_kernels, bench_percipience,
+                            bench_serving, bench_stream_windows,
+                            bench_streams)
 
     suites = {
         # paper Fig. 3: STREAM bandwidth, memory vs storage windows
@@ -83,6 +88,12 @@ def main() -> None:
             partitions=8 if args.quick else 16,
             rows=512 if args.quick else 1024,
             strict=not args.quick),
+        # fused filter->aggregate kernel vs unfused mask-then-reduce:
+        # compiled (non-interpret) timings, byte-identity, closure-cache
+        # reuse — writes results/BENCH_kernels.json
+        "kernels": lambda: bench_kernels.run(
+            rows=1 << 18 if args.quick else 1 << 20,
+            smoke=args.smoke),
     }
     if args.only is not None and args.only not in suites:
         ap.error(f"unknown benchmark {args.only!r} for --only; known "

@@ -56,6 +56,7 @@ CACHED = "cached"
 STATS_KEY = "__sage_stats__"      # piggyback marker in shipped partials
 DEFAULT_SEL = 0.5                 # selectivity of an inestimable predicate
 KMV_K = 64                        # k-minimum-values sketch size
+HIST_BINS = 16                    # equi-width per-column histogram bins
 
 
 # ---------------------------------------------------------------------------
@@ -67,6 +68,10 @@ class ColumnStats:
     lo: float
     hi: float
     distinct: float               # KMV estimate (exact when small)
+    # equi-width counts over [lo, hi] — range-predicate selectivity
+    # interpolates the real distribution instead of assuming uniform.
+    # None on summaries from before histograms existed (still decodes).
+    hist: Optional[Tuple[int, ...]] = None
 
 
 @dataclass(frozen=True)
@@ -86,7 +91,9 @@ class PartitionStats:
     def from_summary(oid: str, version: int, d: Dict) -> "PartitionStats":
         return PartitionStats(
             oid, version, int(d["rows"]), int(d["ncols"]), int(d["nbytes"]),
-            [ColumnStats(c["lo"], c["hi"], c["distinct"]) for c in d["cols"]])
+            [ColumnStats(c["lo"], c["hi"], c["distinct"],
+                         tuple(c["hist"]) if c.get("hist") else None)
+             for c in d["cols"]])
 
 
 def _kmv_distinct(v: np.ndarray, k: int = KMV_K) -> float:
@@ -131,8 +138,13 @@ def summarize_rows(arr: np.ndarray) -> Dict:
             cols.append({"lo": 0.0, "hi": 0.0, "distinct": 0.0})
         else:
             v = rows[:, c]
-            cols.append({"lo": float(np.min(v)), "hi": float(np.max(v)),
-                         "distinct": _kmv_distinct(v)})
+            lo, hi = float(np.min(v)), float(np.max(v))
+            col = {"lo": lo, "hi": hi, "distinct": _kmv_distinct(v)}
+            if hi > lo:
+                col["hist"] = np.histogram(
+                    v.astype(np.float64), bins=HIST_BINS,
+                    range=(lo, hi))[0].tolist()
+            cols.append(col)
     return {"rows": int(n), "ncols": int(ncols),
             "nbytes": int(rows.nbytes), "cols": cols}
 
@@ -419,17 +431,45 @@ class StatsCatalog:
 # selectivity estimation over fragment specs
 # ---------------------------------------------------------------------------
 
+def _hist_frac_below(cs: ColumnStats, v: float) -> Optional[float]:
+    """Approximate fraction of rows with value < v from the equi-width
+    histogram (linear interpolation inside v's bin), or None when the
+    column carries no histogram."""
+    if not cs.hist:
+        return None
+    total = float(sum(cs.hist))
+    if total <= 0 or cs.hi <= cs.lo:
+        return None
+    if v <= cs.lo:
+        return 0.0
+    if v >= cs.hi:
+        return 1.0
+    width = (cs.hi - cs.lo) / len(cs.hist)
+    pos = (v - cs.lo) / width
+    b = min(int(pos), len(cs.hist) - 1)
+    below = sum(cs.hist[:b]) + cs.hist[b] * (pos - b)
+    return float(np.clip(below / total, 0.0, 1.0))
+
+
 def _cmp_selectivity(op: str, cs: ColumnStats, v: float) -> float:
-    """Selectivity of ``col <op> v`` under a uniform-range assumption
-    with the distinct sketch for equality."""
+    """Selectivity of ``col <op> v`` — from the per-column equi-width
+    histogram when the summary carries one (real distribution, so skew
+    stops fooling the ship-vs-fetch decision), falling back to a
+    uniform-range assumption; the distinct sketch handles equality."""
     span = cs.hi - cs.lo
     if op in (">", ">="):
         if span <= 0:
             return 1.0 if (cs.lo > v or (op == ">=" and cs.lo >= v)) else 0.0
+        below = _hist_frac_below(cs, v)
+        if below is not None:
+            return 1.0 - below
         return float(np.clip((cs.hi - v) / span, 0.0, 1.0))
     if op in ("<", "<="):
         if span <= 0:
             return 1.0 if (cs.lo < v or (op == "<=" and cs.lo <= v)) else 0.0
+        below = _hist_frac_below(cs, v)
+        if below is not None:
+            return below
         return float(np.clip((v - cs.lo) / span, 0.0, 1.0))
     if op == "==":
         if v < cs.lo or v > cs.hi:
@@ -676,6 +716,10 @@ class CostContext:
         anything with ``frag_spec``)."""
         tiers = self.tiers or tier_params(self.store)
         frag_key = frag_cache_key(plan.frag_spec)
+        # fusible fragments scan only the columns they read: on colblock
+        # partitions the ranged read prices in at the pruned byte count
+        from repro.analytics.plan import frag_columns, prunable_columns
+        frag_cols = frag_columns(plan.frag_spec)
         out: Dict[str, Decision] = {}
         for oid in self.oids:
             if self.cache_probe is not None and self.cache_probe(frag_key,
@@ -690,6 +734,12 @@ class CostContext:
                 else:
                     tier = tiers.get(self.store.meta(oid).layout.tier)
                 size = self.store.read_size(oid)
+                if frag_cols is not None:
+                    attrs = self.store.meta(oid).attrs
+                    cols = prunable_columns(plan.frag_spec, attrs)
+                    if cols is not None:
+                        from repro.core.columnar import column_nbytes
+                        size = column_nbytes(attrs, cols)
             except KeyError:
                 out[oid] = Decision(SHIP, 0.0, 0.0, 0, None,
                                     "object meta unavailable")

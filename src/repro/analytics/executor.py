@@ -48,7 +48,7 @@ from repro.analytics.dataset import (ContainerSource, Dataset, JoinSource,
                                      LiveStreamSource, StreamSource)
 from repro.analytics.plan import (KernelCfg, PhysicalPlan, apply_ops,
                                   compile_fragment, merge_partials, optimize,
-                                  optimize_streaming)
+                                  optimize_streaming, prunable_columns)
 from repro.analytics.streaming import ContinuousQuery, EventWindow
 from repro.core import layouts as lay
 from repro.core.function_shipping import FunctionShipper
@@ -85,6 +85,9 @@ class QueryStats:
     merge_s: float = 0.0            # caller-side partial merge time
     dedup_hits: int = 0             # fragments shared with an in-flight
                                     # identical query (serving engines)
+    pruned_reads: int = 0           # colblock partitions read column-pruned
+    double_buffered: int = 0        # fetches overlapped with another
+                                    # partition's compute (read-ahead)
     snapshot_version: int = -1      # pinned manifest version (-1: the
                                     # container is not manifest-managed)
 
@@ -297,10 +300,15 @@ class AnalyticsEngine:
     # -- fragment shipping hook (serving engines override) -------------
 
     def _ship_fragment(self, name: str, frag_key: str, oid: str,
-                       stats: Optional[QueryStats] = None):
-        """Ship one compiled fragment at one object.  The serving mixin
-        overrides this with cross-query single-flight dedup; the base
-        engine just ships."""
+                       stats: Optional[QueryStats] = None,
+                       columns: Optional[Tuple[int, ...]] = None):
+        """Ship one compiled fragment at one object.  ``columns``
+        non-None routes through the shipper's pruned columnar read
+        (ranged block fetches of just those columns).  The serving
+        mixin overrides this with cross-query single-flight dedup; the
+        base engine just ships."""
+        if columns is not None:
+            return self.shipper.ship_columns(name, oid, columns)
         return self.shipper.ship(name, oid)
 
     def _observe_selectivity(self, frag_key: str, oid: str, partial):
@@ -440,6 +448,51 @@ class AnalyticsEngine:
                   if self.prefetch_cold else {})
         errors: List[str] = []
         lock = threading.Lock()
+        prune_ok = use_ship and hasattr(self.clovis, "read_columns")
+
+        # double-buffered block streaming (fetch-mode partitions): a
+        # side pool reads the next partition's bytes while the current
+        # one's kernel runs, keeping the store's read path and the
+        # caller's compute overlapped instead of strictly alternating
+        if use_ship:
+            fetch_oids = [o for o in oids if o in decisions
+                          and decisions[o].mode == FETCH]
+        else:
+            fetch_oids = [o for o in oids
+                          if decisions.get(o) is None
+                          or decisions[o].mode != CACHED]
+        dbl: Dict[str, Any] = {}
+        dbl_lock = threading.Lock()
+        dbl_iter = iter(fetch_oids)
+        dbl_pool = (ThreadPoolExecutor(
+                        max_workers=min(len(fetch_oids),
+                                        self.max_workers + 1),
+                        thread_name_prefix="sage-dblbuf")
+                    if len(fetch_oids) > 1 else None)
+
+        def _dbl_read(o: str):
+            fut = staged.get(o)
+            if fut is not None:
+                fut.result()             # promotion finished (or failed)
+            try:
+                ver = store.meta(o).version
+            except KeyError:
+                ver = -1
+            return ver, self._fetch(o)
+
+        def _dbl_advance():
+            """Submit the next not-yet-read fetch partition (one per
+            consumed buffer, so at most depth reads are in flight)."""
+            if dbl_pool is None:
+                return
+            with dbl_lock:
+                for nxt in dbl_iter:
+                    dbl[nxt] = dbl_pool.submit(_dbl_read, nxt)
+                    return
+
+        if dbl_pool is not None:
+            for _ in range(self.max_workers + 1):
+                _dbl_advance()
 
         def task(oid: str):
             d = decisions.get(oid)
@@ -459,11 +512,26 @@ class AnalyticsEngine:
             if fut is not None:
                 fut.result()                 # promotion finished (or failed)
             size = store.read_size(oid)
+            pruned = pipelined = False
             if mode == SHIP and use_ship:
                 name = frag_name
                 if self.cost_based and not self.stats.fresh(oid):
                     name = frag_stats_name   # piggyback a stats refresh
-                res = self._ship_fragment(name, frag_key, oid, stats)
+                cols = None
+                if prune_ok and name is frag_name:
+                    # (the stats piggyback summarizes whole rows, so it
+                    # always reads the full object)
+                    try:
+                        attrs = store.meta(oid).attrs
+                    except KeyError:
+                        attrs = {}
+                    cols = prunable_columns(plan.frag_spec, attrs)
+                    if cols is not None:
+                        from repro.core.columnar import column_nbytes
+                        size = column_nbytes(attrs, cols)
+                        pruned = True
+                res = self._ship_fragment(name, frag_key, oid, stats,
+                                          columns=cols)
                 if not res.ok:
                     with lock:
                         errors.append(f"{oid}: {res.error}")
@@ -481,11 +549,20 @@ class AnalyticsEngine:
                                         self.kcfg)
             else:
                 # whole chain runs caller-side on the fetched object
-                try:
-                    version = store.meta(oid).version
-                except KeyError:
-                    version = -1
-                arr = self._fetch(oid)
+                fut2 = None
+                if dbl_pool is not None:
+                    with dbl_lock:
+                        fut2 = dbl.pop(oid, None)
+                if fut2 is not None:
+                    _dbl_advance()       # next fetch overlaps our kernel
+                    version, arr = fut2.result()
+                    pipelined = True
+                else:
+                    try:
+                        version = store.meta(oid).version
+                    except KeyError:
+                        version = -1
+                    arr = self._fetch(oid)
                 moved = arr.nbytes
                 partial = apply_ops(ds.ops, arr, self.kcfg)
                 if use_ship and not plan.local_ops:
@@ -496,6 +573,10 @@ class AnalyticsEngine:
                 stats.bytes_scanned += size
                 stats.bytes_moved += moved
                 stats.decisions[oid] = mode
+                if pruned:
+                    stats.pruned_reads += 1
+                if pipelined:
+                    stats.double_buffered += 1
             return partial
 
         try:
@@ -504,6 +585,8 @@ class AnalyticsEngine:
                                     ) as pool:
                 partials = list(pool.map(task, oids))
         finally:
+            if dbl_pool is not None:
+                dbl_pool.shutdown(wait=False)
             if use_ship:
                 self.shipper.unregister(frag_name)
                 self.shipper.unregister(frag_stats_name)

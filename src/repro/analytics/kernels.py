@@ -23,7 +23,8 @@ the same shape trick the heat kernel uses for (hist, nobj).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import json
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,16 +32,29 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analytics.exprs import _BINOPS
+
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
 
 OPS = ("sum", "count", "min", "max")
 _LANES = 128
 _SUBLANES = 8
+_TILE = _LANES * _SUBLANES
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def kernel_mode(interpret: bool = False) -> str:
+    """How a kernel call will actually execute: ``pallas-tpu`` (compiled
+    Mosaic), ``xla-jit`` (compiled XLA fallback — the honest CPU path),
+    or ``interpret`` (Pallas interpreter; correctness only, never
+    timing).  Benchmarks label every number with this."""
+    if interpret:
+        return "interpret"
+    return "pallas-tpu" if _on_tpu() else "xla-jit"
 
 
 def _identity(op: str, dtype) -> float:
@@ -49,6 +63,65 @@ def _identity(op: str, dtype) -> float:
     big = np.iinfo(dtype).max if np.issubdtype(dtype, np.integer) \
         else np.inf
     return big if op == "min" else -big
+
+
+# ---------------------------------------------------------------------------
+# expression-spec evaluation (shared by the fused kernel + XLA fallback)
+# ---------------------------------------------------------------------------
+
+def eval_spec(spec: Dict, getcol):
+    """Evaluate a serialised expression spec (exprs.to_spec) against
+    ``getcol(i) -> array``.  The operator table is generic, so the same
+    walker runs on numpy arrays (host reference), jnp arrays (XLA
+    fallback) and Pallas block values (fused kernel body)."""
+    t = spec["t"]
+    if t == "col":
+        return getcol(spec["i"])
+    if t == "lit":
+        return spec["v"]
+    if t == "bin":
+        return _BINOPS[spec["op"]](eval_spec(spec["l"], getcol),
+                                   eval_spec(spec["r"], getcol))
+    if t == "not":
+        return ~eval_spec(spec["e"], getcol)
+    raise ValueError(f"bad expr spec {spec!r}")
+
+
+def spec_columns(spec: Optional[Dict]) -> set:
+    """Column indices a spec reads (pruned-scan planning)."""
+    if spec is None:
+        return set()
+    t = spec["t"]
+    if t == "col":
+        return {spec["i"]}
+    if t == "bin":
+        return spec_columns(spec["l"]) | spec_columns(spec["r"])
+    if t == "not":
+        return spec_columns(spec["e"])
+    return set()
+
+
+_CMP_OPS = (">", ">=", "<", "<=", "==", "!=")
+
+
+def _spec_dtype(spec: Dict, coldt: Dict[int, np.dtype]) -> np.dtype:
+    """Result dtype of a spec under numpy promotion — how the unfused
+    path's ``expr(rows)`` would come out, so the fused kernel picks the
+    identical int32/float32 accumulator."""
+    t = spec["t"]
+    if t == "col":
+        return np.dtype(coldt[spec["i"]])
+    if t == "lit":
+        return np.asarray(spec["v"]).dtype
+    if t == "not":
+        return np.dtype(bool)
+    if spec["op"] in _CMP_OPS:
+        return np.dtype(bool)
+    l = _spec_dtype(spec["l"], coldt)
+    r = _spec_dtype(spec["r"], coldt)
+    if spec["op"] == "/":
+        return np.result_type(l, r, np.float32)
+    return np.result_type(l, r)
 
 
 # ---------------------------------------------------------------------------
@@ -83,18 +156,15 @@ def _segment_kernel(v_ref, id_ref, out_ref, *, rows: int, op: str,
     out_ref[...] = jax.lax.fori_loop(0, rows, body, init)
 
 
-def segment_reduce_pallas(values: jax.Array, seg_ids: jax.Array,
-                          n_seg_blocks: int, *, op: str,
-                          interpret: bool = False) -> jax.Array:
-    """values: (rows, 128) f32/int32; seg_ids: (rows, 128) int32 with -1
-    marking padding lanes.  Returns (1, n_seg_blocks * 128) reduced
-    values (identity where a segment saw no members)."""
-    rows, lanes = values.shape
-    assert lanes == _LANES and rows % _SUBLANES == 0
-    ident = _identity(op, np.dtype(values.dtype))
+@functools.lru_cache(maxsize=512)
+def _segment_call(rows: int, n_seg_blocks: int, op: str, dtype_name: str,
+                  interpret: bool):
+    """Jitted pallas_call for one (tile shape, op, dtype) — cached so
+    per-partition calls with a recurring padded shape stop retracing."""
+    ident = _identity(op, np.dtype(dtype_name))
     kernel = functools.partial(_segment_kernel, rows=rows, op=op,
                                ident=ident)
-    out = pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=(n_seg_blocks,),
         in_specs=[
@@ -103,12 +173,46 @@ def segment_reduce_pallas(values: jax.Array, seg_ids: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, _LANES), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, n_seg_blocks * _LANES),
-                                       values.dtype),
+                                       np.dtype(dtype_name)),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(values, seg_ids)
-    return out
+    )
+    return jax.jit(call)
+
+
+def segment_reduce_pallas(values: jax.Array, seg_ids: jax.Array,
+                          n_seg_blocks: int, *, op: str,
+                          interpret: bool = False) -> jax.Array:
+    """values: (rows, 128) f32/int32; seg_ids: (rows, 128) int32 with -1
+    marking padding lanes.  Returns (1, n_seg_blocks * 128) reduced
+    values (identity where a segment saw no members)."""
+    rows, lanes = values.shape
+    assert lanes == _LANES and rows % _SUBLANES == 0
+    call = _segment_call(rows, n_seg_blocks, op,
+                         np.dtype(values.dtype).name, interpret)
+    return call(values, seg_ids)
+
+
+@functools.lru_cache(maxsize=512)
+def _xla_segment_call(op: str, dtype_name: str, n_segments: int):
+    """Compiled XLA segmented reduce — the honest non-interpret CPU
+    path.  Negative ids route to a dump bucket past the real segments;
+    jax.ops.segment_* fill empty segments with the exact op identities
+    (0 / iinfo extremes / ±inf), matching ``_identity``."""
+    def run(v, ids):
+        idx = jnp.where(ids >= 0, ids, n_segments)
+        if op == "sum":
+            out = jax.ops.segment_sum(v, idx, num_segments=n_segments + 1)
+        elif op == "count":
+            out = jax.ops.segment_sum(jnp.ones_like(v), idx,
+                                      num_segments=n_segments + 1)
+        elif op == "min":
+            out = jax.ops.segment_min(v, idx, num_segments=n_segments + 1)
+        else:
+            out = jax.ops.segment_max(v, idx, num_segments=n_segments + 1)
+        return out[:n_segments]
+    return jax.jit(run)
 
 
 def segment_reduce(values: np.ndarray, seg_ids: np.ndarray, n_segments: int,
@@ -118,7 +222,9 @@ def segment_reduce(values: np.ndarray, seg_ids: np.ndarray, n_segments: int,
 
     Negative ids are dropped.  Integer inputs reduce in int32 (exact);
     everything else in float32.  Returns (n_segments,) with the op
-    identity for empty segments.
+    identity for empty segments.  Off TPU with ``interpret=False`` the
+    reduction runs as compiled XLA (``kernel_mode``); ``interpret=True``
+    forces the Pallas interpreter (bit-parity with the TPU kernel).
     """
     if op not in OPS:
         raise ValueError(f"op must be one of {OPS}")
@@ -134,18 +240,23 @@ def segment_reduce(values: np.ndarray, seg_ids: np.ndarray, n_segments: int,
     ident = _identity(op, np.dtype(dtype))
 
     n = v.size
-    pad = (-n) % (_LANES * _SUBLANES)
+    pad = (-n) % _TILE
     if pad:
         v = np.pad(v, (0, pad), constant_values=dtype(0) if op in
                    ("sum", "count") else ident)
         ids = np.pad(ids, (0, pad), constant_values=-1)
+
+    mode = kernel_mode(interpret)
+    if mode == "xla-jit":
+        call = _xla_segment_call(op, np.dtype(dtype).name, n_segments)
+        return np.asarray(call(jnp.asarray(v), jnp.asarray(ids)))
+
     vm = v.reshape(-1, _LANES)
     im = ids.reshape(-1, _LANES)
     n_seg_blocks = -(-n_segments // _LANES)
-
     out = np.asarray(segment_reduce_pallas(
         jnp.asarray(vm), jnp.asarray(im), n_seg_blocks, op=op,
-        interpret=interpret or not _on_tpu()))
+        interpret=mode == "interpret"))
     return out[0, :n_segments]
 
 
@@ -185,23 +296,42 @@ def _window_kernel(v_ref, out_ref, *, op: str):
         out_ref[...] = jnp.max(v, axis=0, keepdims=True)
 
 
+@functools.lru_cache(maxsize=512)
+def _window_call(w: int, nw: int, op: str, dtype_name: str,
+                 interpret: bool):
+    kernel = functools.partial(_window_kernel, op=op)
+    call = pl.pallas_call(
+        kernel,
+        grid=(nw // _LANES,),
+        in_specs=[pl.BlockSpec((w, _LANES), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, _LANES), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nw), np.dtype(dtype_name)),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )
+    return jax.jit(call)
+
+
 def window_reduce_pallas(vt: jax.Array, *, op: str,
                          interpret: bool = False) -> jax.Array:
     """vt: (window, n_windows) with window % 8 == 0, n_windows % 128 == 0.
     Returns (1, n_windows)."""
     w, nw = vt.shape
     assert w % _SUBLANES == 0 and nw % _LANES == 0
-    kernel = functools.partial(_window_kernel, op=op)
-    return pl.pallas_call(
-        kernel,
-        grid=(nw // _LANES,),
-        in_specs=[pl.BlockSpec((w, _LANES), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((1, _LANES), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, nw), vt.dtype),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel",)),
-        interpret=interpret,
-    )(vt)
+    call = _window_call(w, nw, op, np.dtype(vt.dtype).name, interpret)
+    return call(vt)
+
+
+@functools.lru_cache(maxsize=512)
+def _xla_window_call(op: str, dtype_name: str):
+    def run(mat):                            # (n_windows, window)
+        if op in ("sum", "count"):
+            return jnp.sum(mat, axis=1)
+        if op == "min":
+            return jnp.min(mat, axis=1)
+        return jnp.max(mat, axis=1)
+    return jax.jit(run)
 
 
 def _window_matrix(values: np.ndarray, window: int, slide: int
@@ -236,6 +366,11 @@ def window_reduce(values: np.ndarray, window: int, *, op: str = "sum",
         mat = np.ones_like(mat)
     ident = _identity(op, np.dtype(dtype))
 
+    mode = kernel_mode(interpret)
+    if mode == "xla-jit":
+        call = _xla_window_call(op, np.dtype(dtype).name)
+        return np.asarray(call(jnp.asarray(mat)))
+
     vt = np.ascontiguousarray(mat.T)          # (window, n_windows)
     w, nw = vt.shape
     pw, pn = (-w) % _SUBLANES, (-nw) % _LANES
@@ -243,7 +378,7 @@ def window_reduce(values: np.ndarray, window: int, *, op: str = "sum",
         fill = dtype(0) if op in ("sum", "count") else ident
         vt = np.pad(vt, ((0, pw), (0, pn)), constant_values=fill)
     out = np.asarray(window_reduce_pallas(
-        jnp.asarray(vt), op=op, interpret=interpret or not _on_tpu()))
+        jnp.asarray(vt), op=op, interpret=mode == "interpret"))
     return out[0, :nw]
 
 
@@ -293,3 +428,308 @@ def histogram_ref(values: np.ndarray, bins: int,
                   vrange: Tuple[float, float]) -> np.ndarray:
     return np.histogram(np.asarray(values).reshape(-1), bins=bins,
                         range=vrange)[0].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# fused filter -> segmented reduce
+# ---------------------------------------------------------------------------
+#
+# The pushdown hot path: evaluate the shipped predicate AND fold the
+# survivors into segment accumulators in one pass over the tiled block —
+# no materialized boolean mask, no compacted intermediate rows.  Inputs
+# arrive as individual column lanes (the colblock pruned-read shape), a
+# predicate/value expression spec each, and host-computed segment ids
+# for the *unfiltered* rows; rejected rows simply never match a segment
+# lane.  Each call also returns per-segment survivor counts so the
+# caller can drop empty groups (keeping group keys identical to the
+# unfused filter-then-unique path) and derive means.
+
+def _fused_kernel(*refs, ncols: int, order: Tuple[int, ...], rows: int,
+                  op: str, ident, pred_spec: Optional[Dict],
+                  value_spec: Optional[Dict], out_dtype):
+    """refs: ncols column blocks (rows, 128), then ids (rows, 128), then
+    acc (1, 128) and count (1, 128) outputs for this grid step's
+    128-segment block."""
+    col_vals = {orig: refs[j][...] for j, orig in enumerate(order)}
+    id_ref, acc_ref, cnt_ref = refs[ncols], refs[ncols + 1], refs[ncols + 2]
+    ids = id_ref[...]
+
+    if pred_spec is None:
+        keep = jnp.ones(ids.shape, jnp.bool_)
+    else:
+        keep = eval_spec(pred_spec, lambda i: col_vals[i])
+        keep = jnp.broadcast_to(jnp.asarray(keep, jnp.bool_), ids.shape)
+    # padding lanes carry ids == -1, so they never match a segment lane
+    ids_eff = jnp.where(keep, ids, -1)
+
+    if value_spec is None:
+        val = jnp.ones(ids.shape, out_dtype)
+    else:
+        val = eval_spec(value_spec, lambda i: col_vals[i])
+        val = jnp.broadcast_to(jnp.asarray(val).astype(out_dtype),
+                               ids.shape)
+
+    base = pl.program_id(0) * _LANES
+    segs = base + jax.lax.broadcasted_iota(jnp.int32, (_LANES, _LANES), 1)
+
+    def body(r, carry):                      # carry: ((1,128), (1,128))
+        acc, cnt = carry
+        mask = ids_eff[r][:, None] == segs   # (128 rows, 128 segments)
+        cnt = cnt + jnp.sum(mask.astype(jnp.int32), axis=0)[None, :]
+        if op == "count":
+            acc = acc + jnp.sum(mask.astype(acc.dtype), axis=0)[None, :]
+        elif op == "sum":
+            acc = acc + jnp.sum(jnp.where(mask, val[r][:, None], 0),
+                                axis=0)[None, :]
+        elif op == "min":
+            red = jnp.min(jnp.where(mask, val[r][:, None], ident), axis=0)
+            acc = jnp.minimum(acc, red[None, :])
+        else:
+            red = jnp.max(jnp.where(mask, val[r][:, None], ident), axis=0)
+            acc = jnp.maximum(acc, red[None, :])
+        return acc, cnt
+
+    init_acc = jnp.full_like(acc_ref, ident) if op in ("min", "max") \
+        else jnp.zeros_like(acc_ref)
+    acc, cnt = jax.lax.fori_loop(0, rows, body,
+                                 (init_acc, jnp.zeros_like(cnt_ref)))
+    acc_ref[...] = acc
+    cnt_ref[...] = cnt
+
+
+@functools.lru_cache(maxsize=512)
+def _fused_pallas_call(rows: int, n_seg_blocks: int, op: str,
+                       dtype_name: str, pred_json: str, value_json: str,
+                       order: Tuple[int, ...], interpret: bool):
+    dtype = np.dtype(dtype_name)
+    ncols = len(order)
+    kernel = functools.partial(
+        _fused_kernel, ncols=ncols, order=order, rows=rows, op=op,
+        ident=_identity(op, dtype),
+        pred_spec=json.loads(pred_json) if pred_json else None,
+        value_spec=json.loads(value_json) if value_json else None,
+        out_dtype=dtype)
+    call = pl.pallas_call(
+        kernel,
+        grid=(n_seg_blocks,),
+        in_specs=[pl.BlockSpec((rows, _LANES), lambda i: (0, 0))
+                  for _ in range(ncols + 1)],
+        out_specs=[pl.BlockSpec((1, _LANES), lambda i: (0, i)),
+                   pl.BlockSpec((1, _LANES), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, n_seg_blocks * _LANES), dtype),
+                   jax.ShapeDtypeStruct((1, n_seg_blocks * _LANES),
+                                        np.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )
+    return jax.jit(call)
+
+
+_XLA_FOLD_SEGMENTS = 64            # membership-fold beats scatter below this
+_XLA_FOLD_CHUNK = 1 << 13          # rows per scan step (fits L2 with mask)
+
+
+@functools.lru_cache(maxsize=512)
+def _fused_xla_call(op: str, dtype_name: str, n_segments: int,
+                    pred_json: str, value_json: str,
+                    order: Tuple[int, ...]):
+    """Compiled XLA fusion for the non-TPU path: predicate + value +
+    segmented reduce in one jitted program.  Small segment counts run
+    the same membership fold the Pallas kernel uses — a streaming
+    chunked pass carrying one accumulator lane per segment, no scatter
+    and no materialised mask; larger counts fall back to XLA's segment
+    scatter with a dump bucket for rejected/padding rows."""
+    pred_spec = json.loads(pred_json) if pred_json else None
+    value_spec = json.loads(value_json) if value_json else None
+    dtype = np.dtype(dtype_name)
+    ident = _identity(op, dtype)
+
+    def _eval(ids, colarrs):
+        cols = {orig: colarrs[j] for j, orig in enumerate(order)}
+        if pred_spec is None:
+            keep = ids >= 0
+        else:
+            keep = eval_spec(pred_spec, lambda i: cols[i])
+            keep = jnp.broadcast_to(jnp.asarray(keep, jnp.bool_),
+                                    ids.shape) & (ids >= 0)
+        if value_spec is None:
+            val = jnp.ones(ids.shape, dtype)
+        else:
+            val = eval_spec(value_spec, lambda i: cols[i])
+            val = jnp.broadcast_to(jnp.asarray(val).astype(dtype),
+                                   ids.shape)
+        return keep, val
+
+    def _fold(ids, colarrs, acc, cnt):
+        keep, val = _eval(ids, colarrs)
+        ids_eff = jnp.where(keep, ids, -1)
+        m = ids_eff[:, None] == jnp.arange(n_segments,
+                                           dtype=jnp.int32)[None, :]
+        mv = jnp.where(m, val[:, None], jnp.asarray(ident, dtype))
+        if op in ("sum", "count"):
+            acc = acc + jnp.sum(mv, axis=0)
+        elif op == "min":
+            acc = jnp.minimum(acc, jnp.min(mv, axis=0))
+        else:
+            acc = jnp.maximum(acc, jnp.max(mv, axis=0))
+        return acc, cnt + jnp.sum(m, axis=0, dtype=jnp.int32)
+
+    def run(ids, *colarrs):
+        if n_segments <= _XLA_FOLD_SEGMENTS:
+            n, ch = ids.shape[0], _XLA_FOLD_CHUNK
+            acc = jnp.full((n_segments,), ident, dtype)
+            cnt = jnp.zeros((n_segments,), jnp.int32)
+            main = (n // ch) * ch
+            if main:
+                def body(carry, xs):
+                    return _fold(xs[0], xs[1:], *carry), None
+                xs = (ids[:main].reshape(-1, ch),) + tuple(
+                    c[:main].reshape(-1, ch) for c in colarrs)
+                (acc, cnt), _ = jax.lax.scan(body, (acc, cnt), xs)
+            if n > main:
+                acc, cnt = _fold(ids[main:],
+                                 [c[main:] for c in colarrs], acc, cnt)
+            return acc, cnt
+        keep, val = _eval(ids, colarrs)
+        idx = jnp.where(keep, ids, n_segments)
+        seg = {"sum": jax.ops.segment_sum, "count": jax.ops.segment_sum,
+               "min": jax.ops.segment_min, "max": jax.ops.segment_max}[op]
+        acc = seg(val, idx, num_segments=n_segments + 1)
+        cnt = jax.ops.segment_sum(keep.astype(jnp.int32), idx,
+                                  num_segments=n_segments + 1)
+        return acc[:n_segments], cnt[:n_segments]
+    return jax.jit(run)
+
+
+def fused_out_dtype(value_spec: Optional[Dict],
+                    coldt: Dict[int, np.dtype]) -> np.dtype:
+    """int32/float32 accumulator choice, identical to what the unfused
+    path gets from evaluating the value expr on numpy rows."""
+    if value_spec is None:
+        return np.dtype(np.int32)            # count's ones
+    dt = _spec_dtype(value_spec, coldt)
+    return np.dtype(np.int32) if np.issubdtype(dt, np.integer) \
+        else np.dtype(np.float32)
+
+
+def fused_filter_aggregate(cols: Dict[int, np.ndarray],
+                           pred_spec: Optional[Dict],
+                           value_spec: Optional[Dict],
+                           seg_ids: np.ndarray, n_segments: int, *,
+                           op: str, interpret: bool = False,
+                           out_dtype=None
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """One-pass filter -> segmented reduce over column arrays.
+
+    ``cols`` maps original column index -> (rows,) array (a pruned
+    colblock read or sliced row-major block); ``seg_ids`` are
+    host-computed int32 ids in [0, n_segments) over the *unfiltered*
+    rows (-1 drops a row unconditionally).  Returns
+    ``(agg, counts)`` of shape (n_segments,): the op-reduced survivor
+    values (op identity where no survivors) and survivor counts.
+    Integer aggregates are exact int32 — bit-identical to the unfused
+    mask-then-reduce path on every backend.  ``out_dtype`` overrides the
+    inferred int32/float32 accumulator (grouped means reduce integer
+    values in float32, matching the unfused cast-then-reduce).
+    """
+    if op not in OPS:
+        raise ValueError(f"op must be one of {OPS}")
+    ids = np.asarray(seg_ids, np.int32).reshape(-1)
+    n = ids.size
+    order = tuple(sorted(cols))
+    coldt = {i: np.asarray(cols[i]).dtype for i in order}
+    dtype = np.dtype(out_dtype) if out_dtype is not None \
+        else fused_out_dtype(value_spec, coldt)
+    ident = _identity(op, dtype)
+    if n_segments <= 0 or n == 0:
+        return (np.full((max(n_segments, 0),), ident, dtype),
+                np.zeros((max(n_segments, 0),), np.int32))
+
+    pred_json = json.dumps(pred_spec, sort_keys=True) if pred_spec else ""
+    value_json = json.dumps(value_spec, sort_keys=True) if value_spec \
+        else ""
+
+    pad = (-n) % _TILE
+    ids_p = np.pad(ids, (0, pad), constant_values=-1) if pad else ids
+    col_p = []
+    for i in order:
+        c = np.asarray(cols[i]).reshape(-1)
+        if c.size != n:
+            raise ValueError(f"column {i} has {c.size} rows, ids {n}")
+        # pad value 1 keeps pad-lane predicate math away from div-by-zero
+        col_p.append(np.pad(c, (0, pad), constant_values=c.dtype.type(1))
+                     if pad else c)
+
+    mode = kernel_mode(interpret)
+    if mode == "xla-jit":
+        call = _fused_xla_call(op, dtype.name, n_segments, pred_json,
+                               value_json, order)
+        acc, cnt = call(jnp.asarray(ids_p),
+                        *[jnp.asarray(c) for c in col_p])
+        return np.asarray(acc), np.asarray(cnt)
+
+    rows = ids_p.size // _LANES
+    n_seg_blocks = -(-n_segments // _LANES)
+    call = _fused_pallas_call(rows, n_seg_blocks, op, dtype.name,
+                              pred_json, value_json, order,
+                              mode == "interpret")
+    acc, cnt = call(*[jnp.asarray(c.reshape(-1, _LANES)) for c in col_p],
+                    jnp.asarray(ids_p.reshape(-1, _LANES)))
+    return (np.asarray(acc)[0, :n_segments],
+            np.asarray(cnt)[0, :n_segments])
+
+
+def fused_filter_aggregate_ref(cols: Dict[int, np.ndarray],
+                               pred_spec: Optional[Dict],
+                               value_spec: Optional[Dict],
+                               seg_ids: np.ndarray, n_segments: int, *,
+                               op: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Pure-numpy reference: materialize the mask, compact, reduce —
+    exactly the unfused path the fused kernel must match."""
+    ids = np.asarray(seg_ids, np.int64).reshape(-1)
+    order = tuple(sorted(cols))
+    coldt = {i: np.asarray(cols[i]).dtype for i in order}
+    dtype = fused_out_dtype(value_spec, coldt)
+    getcol = lambda i: np.asarray(cols[i]).reshape(-1)   # noqa: E731
+    if pred_spec is None:
+        keep = ids >= 0
+    else:
+        keep = np.broadcast_to(
+            np.asarray(eval_spec(pred_spec, getcol), bool),
+            ids.shape) & (ids >= 0)
+    if value_spec is None:
+        val = np.ones(ids.shape, dtype)
+    else:
+        val = np.broadcast_to(
+            np.asarray(eval_spec(value_spec, getcol)).astype(dtype),
+            ids.shape)
+    ids_k, val_k = ids[keep], val[keep]
+    acc = segment_reduce_ref(val_k.astype(dtype), ids_k, n_segments, op=op)
+    cnt = segment_reduce_ref(np.ones(ids_k.shape, np.int32), ids_k,
+                             n_segments, op="count")
+    return acc.astype(dtype), cnt
+
+
+# ---------------------------------------------------------------------------
+# kernel-closure cache introspection
+# ---------------------------------------------------------------------------
+
+_CACHED_BUILDERS = (_segment_call, _xla_segment_call, _window_call,
+                    _xla_window_call, _fused_pallas_call, _fused_xla_call)
+
+
+def kernel_cache_info() -> Dict[str, int]:
+    """Aggregate hit/miss/entry counts over every cached jitted-kernel
+    builder — a miss is one trace+compile; hits reuse the closure."""
+    hits = misses = entries = 0
+    for b in _CACHED_BUILDERS:
+        ci = b.cache_info()
+        hits, misses, entries = (hits + ci.hits, misses + ci.misses,
+                                 entries + ci.currsize)
+    return {"hits": hits, "misses": misses, "entries": entries}
+
+
+def kernel_cache_clear():
+    for b in _CACHED_BUILDERS:
+        b.cache_clear()

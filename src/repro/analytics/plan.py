@@ -283,6 +283,7 @@ def as_rows(arr: np.ndarray) -> np.ndarray:
 class KernelCfg:
     use_kernel: bool = True
     interpret: bool = False
+    fuse: bool = True            # fused filter->aggregate when chain allows
 
 
 def _seg_reduce(vals, ids, n, op, kcfg: KernelCfg):
@@ -339,13 +340,249 @@ def _scalar_partial(vals: np.ndarray, agg: Aggregate):
     return ("scalar", "max", vals.max())
 
 
+# ---------------------------------------------------------------------------
+# fused filter -> aggregate (single kernel pass, no mask materialisation)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FusedChain:
+    """A fusible op chain, normalised to *original* column indices:
+    all filters ANDed into one predicate spec, the optional group key
+    and aggregate value specs, and the set of columns the whole chain
+    reads (what a pruned colblock scan must fetch)."""
+    pred_spec: Optional[Dict]
+    key_spec: Optional[Dict]
+    value_spec: Optional[Dict]
+    agg: str
+    columns: Tuple[int, ...]
+
+
+def _remap_spec(spec: Dict, colmap: Optional[List[int]]) -> Dict:
+    """Rewrite a spec's column refs through the current projection map
+    so it addresses the partition's original columns."""
+    if colmap is None:
+        return spec
+    t = spec["t"]
+    if t == "col":
+        return {"t": "col", "i": colmap[spec["i"]]}
+    if t == "bin":
+        return {"t": "bin", "op": spec["op"],
+                "l": _remap_spec(spec["l"], colmap),
+                "r": _remap_spec(spec["r"], colmap)}
+    if t == "not":
+        return {"t": "not", "e": _remap_spec(spec["e"], colmap)}
+    return spec
+
+
+def fuse_chain(ops: Sequence[Op]) -> Optional[FusedChain]:
+    """Recognise a Filter*/Select*/KeyBy?/Aggregate chain the fused
+    kernel can run in one pass.  Returns None when the chain doesn't
+    qualify (window, map_rows, histogram, mid-chain aggregates, ops
+    after key_by) — callers fall back to the unfused interpreter."""
+    ops = list(ops)
+    if not ops or not isinstance(ops[-1], Aggregate):
+        return None
+    agg = ops[-1]
+    if agg.agg not in ("sum", "count", "mean", "min", "max"):
+        return None
+    colmap: Optional[List[int]] = None       # current idx -> original idx
+    preds: List[Dict] = []
+    key_spec: Optional[Dict] = None
+    try:
+        for op in ops[:-1]:
+            if key_spec is not None:
+                return None                  # only the aggregate follows key_by
+            if isinstance(op, Filter):
+                preds.append(_remap_spec(op.expr.to_spec(), colmap))
+            elif isinstance(op, Select):
+                colmap = [colmap[c] for c in op.cols] if colmap is not None \
+                    else list(op.cols)
+            elif isinstance(op, KeyBy):
+                key_spec = _remap_spec(op.key.to_spec(), colmap)
+            else:
+                return None
+        if agg.value is not None:
+            value_spec = _remap_spec(agg.value.to_spec(), colmap)
+        elif agg.agg == "count":
+            value_spec = None
+        elif colmap is not None and len(colmap) == 1:
+            value_spec = {"t": "col", "i": colmap[0]}   # single-col rule
+        else:
+            return None                      # column count unknown until run
+    except (IndexError, KeyError):
+        return None                          # bad col ref: unfused path errors
+    pred_spec = None
+    for p in preds:
+        pred_spec = p if pred_spec is None else \
+            {"t": "bin", "op": "&", "l": pred_spec, "r": p}
+    cols = (K.spec_columns(pred_spec) | K.spec_columns(key_spec)
+            | K.spec_columns(value_spec))
+    return FusedChain(pred_spec, key_spec, value_spec, agg.agg,
+                      tuple(sorted(cols)))
+
+
+_DENSE_KEY_SPAN = 1 << 16          # identity seg-id map below this key range
+
+
+def _fuse_dtype_ok(fc: FusedChain, coldt) -> bool:
+    """Whether the fused kernel's int32/float32 accumulators reproduce
+    the unfused path bit-for-bit at these column dtypes.  Grouped
+    aggregates always qualify (the unfused segment reduce applies the
+    same casts); scalar aggregates must match ``_scalar_partial``'s
+    float64/native payloads exactly."""
+    if fc.key_spec is not None or fc.agg == "count":
+        return True
+    vdt = K._spec_dtype(fc.value_spec, coldt)
+    if fc.agg in ("sum", "mean"):
+        # unfused scalar sums accumulate in float64; int32 is the only
+        # kernel dtype that converts back exactly — and mean's payload
+        # is the (f64 sum, count) pair the kernel doesn't produce
+        return (fc.agg == "sum"
+                and np.issubdtype(vdt, np.integer)
+                and np.can_cast(vdt, np.int32))
+    # min/max: lossless accumulator dtypes only
+    return (vdt == np.float32
+            or (np.issubdtype(vdt, np.integer)
+                and np.can_cast(vdt, np.int32)))
+
+
+def _apply_fused(fc: FusedChain, data, kcfg: KernelCfg):
+    """Run a FusedChain over one partition (row array or pruned
+    ColumnBatch) through the fused kernel.  Returns the same tagged
+    partial the unfused interpreter yields, or None when this partition
+    must fall back (dtype the kernel's int32/float32 accumulators can't
+    reproduce bit-for-bit against the unfused path)."""
+    from repro.core.columnar import ColumnBatch
+    if isinstance(data, ColumnBatch):
+        if any(c not in data for c in fc.columns):
+            return None                      # pruned without our columns
+        nrows = data.rows
+        cols = {i: data.col(i) for i in fc.columns}
+    else:
+        rows = as_rows(data)
+        if any(c >= rows.shape[1] for c in fc.columns):
+            return None                      # unfused path raises the error
+        nrows = rows.shape[0]
+        cols = {i: np.ascontiguousarray(rows[:, i]) for i in fc.columns}
+    coldt = {i: c.dtype for i, c in cols.items()}
+
+    if not _fuse_dtype_ok(fc, coldt):
+        return None
+
+    if fc.key_spec is not None:
+        if nrows == 0:
+            return ("group", fc.agg, np.zeros(0, np.int64),
+                    _empty_group_payload(fc, coldt))
+        key = np.asarray(K.eval_spec(fc.key_spec,
+                                     lambda i: cols[i])).reshape(-1)
+        k64 = key.astype(np.int64)
+        kmin, kmax = int(k64.min()), int(k64.max())
+        if kmax - kmin < _DENSE_KEY_SPAN:
+            n = kmax - kmin + 1
+            ids = (k64 - kmin).astype(np.int32)
+            keys_all = np.arange(kmin, kmax + 1, dtype=np.int64)
+        else:
+            keys_all, inv = np.unique(k64, return_inverse=True)
+            n = len(keys_all)
+            ids = inv.astype(np.int32)
+        op = "sum" if fc.agg in ("count", "mean") else fc.agg
+        value_spec = None if fc.agg == "count" else fc.value_spec
+        out_dtype = np.float32 if fc.agg == "mean" else None
+        acc, cnt = K.fused_filter_aggregate(
+            cols, fc.pred_spec, value_spec, ids, n, op=op,
+            interpret=kcfg.interpret, out_dtype=out_dtype)
+        live = cnt > 0                       # drop keys with no survivors
+        keys = keys_all[live]
+        if fc.agg == "mean":
+            return ("group", "mean", keys, (acc[live], cnt[live]))
+        return ("group", fc.agg, keys, acc[live])
+
+    # scalar: one segment, every surviving row folds into lane 0
+    ids = np.zeros(nrows, np.int32)
+    value_spec = None if fc.agg == "count" else fc.value_spec
+    acc, cnt = K.fused_filter_aggregate(cols, fc.pred_spec, value_spec,
+                                        ids, 1, op=fc.agg,
+                                        interpret=kcfg.interpret)
+    if int(cnt[0]) == 0:
+        return ("scalar", fc.agg, None)
+    if fc.agg == "count":
+        return ("scalar", "count", int(acc[0]))
+    if fc.agg == "sum":
+        return ("scalar", "sum", np.float64(acc[0]))
+    return ("scalar", fc.agg, acc[0])
+
+
+def _empty_group_payload(fc: FusedChain, coldt):
+    dt = K.fused_out_dtype(None if fc.agg == "count" else fc.value_spec,
+                           coldt)
+    if fc.agg == "mean":
+        return (np.zeros(0, np.float32), np.zeros(0, np.int32))
+    return np.zeros(0, dt)
+
+
+def frag_columns(frag_spec: List[Dict]) -> Optional[Tuple[int, ...]]:
+    """Original column indices a fragment needs, when the chain is
+    fusible (= statically known) — what the executor passes to a pruned
+    colblock read.  None means the fragment may touch any column."""
+    try:
+        ops = [op_from_spec(s) for s in frag_spec]
+    except (ValueError, KeyError, TypeError):
+        return None
+    fc = fuse_chain(ops)
+    return fc.columns if fc is not None else None
+
+
+def prunable_columns(frag_spec: List[Dict],
+                     attrs: Dict) -> Optional[Tuple[int, ...]]:
+    """Columns for a *safe* pruned colblock read of this fragment at
+    this object: non-None only when the fused path is guaranteed to run
+    at the object's column dtypes.  A pruned ColumnBatch cannot rebuild
+    rows, so the unfused fallback must be statically unreachable before
+    the executor drops any column from the read."""
+    from repro.core.columnar import COLBLOCK_KIND
+    if attrs.get("kind") != COLBLOCK_KIND:
+        return None
+    try:
+        ops = [op_from_spec(s) for s in frag_spec]
+    except (ValueError, KeyError, TypeError):
+        return None
+    fc = fuse_chain(ops)
+    if fc is None:
+        return None
+    names = attrs.get("coldtypes") or []
+    ncols = (attrs.get("shape") or [0, 0])[1]
+    if len(names) != ncols or any(c >= ncols for c in fc.columns):
+        return None
+    try:
+        coldt = {i: np.dtype(n) for i, n in enumerate(names)}
+    except TypeError:
+        return None                    # exotic dtype name (e.g. bfloat16)
+    return fc.columns if _fuse_dtype_ok(fc, coldt) else None
+
+
 def apply_ops(ops: Sequence[Op], arr: np.ndarray,
               kcfg: Optional[KernelCfg] = None):
     """Run an op chain over one partition; returns a tagged partial:
     ("rows", ndarray) | ("scalar", agg, payload) |
-    ("group", agg, keys, payload) | ("window", agg, ndarray) |
-    ("histogram", counts)."""
+    ("group", agg, keys, payload) | ("histogram", counts) |
+    ("window", agg, ndarray).
+
+    Filter-prefix + aggregate chains route through the fused kernel
+    (one pass, no materialized mask) when ``kcfg.use_kernel`` and
+    ``kcfg.fuse``; every other chain — and every partition the fused
+    path can't reproduce bit-for-bit — runs the unfused interpreter.
+    ``arr`` may be a pruned ``ColumnBatch`` (colblock scan); unfused
+    chains rebuild rows from it, which requires every column."""
     kcfg = kcfg or KernelCfg()
+    if kcfg.use_kernel and kcfg.fuse:
+        fc = fuse_chain(ops)
+        if fc is not None:
+            out = _apply_fused(fc, arr, kcfg)
+            if out is not None:
+                return out
+    from repro.core.columnar import ColumnBatch
+    if isinstance(arr, ColumnBatch):
+        arr = arr.to_rows()
     rows = as_rows(arr)
     key: Optional[np.ndarray] = None
     window: Optional[Window] = None

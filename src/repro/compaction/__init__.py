@@ -100,14 +100,26 @@ class CompactionService:
         self.registry.get(snap.container).unpin(snap)
 
     def read_rows(self, container: str,
-                  snapshot: Optional[Snapshot] = None) -> np.ndarray:
+                  snapshot: Optional[Snapshot] = None,
+                  columns: Optional[List[int]] = None) -> np.ndarray:
         """The container's logical rows in manifest order — from a
         pinned snapshot (stable while compaction runs) or the current
-        version.  Empty manifests read as a (0, 0) array."""
+        version.  ``columns`` prunes the scan to the named column
+        indices (ranged reads on colblock partitions — only those
+        columns' blocks are fetched; row-major deltas slice after a
+        full read).  Empty manifests read as a (0, 0) array."""
         snap = snapshot or self.registry.get(container).snapshot()
-        parts = [self.clovis.get_array(e.oid) for e in snap.entries]
-        if not parts:
-            return np.zeros((0, 0))
+        if columns is not None:
+            parts = [self.clovis.read_columns(e.oid, columns).stack(columns)
+                     if hasattr(self.clovis, "read_columns")
+                     else self.clovis.materialize(e.oid)[:, columns]
+                     for e in snap.entries]
+            if not parts:
+                return np.zeros((0, len(columns)))
+        else:
+            parts = [self.clovis.materialize(e.oid) for e in snap.entries]
+            if not parts:
+                return np.zeros((0, 0))
         return np.vstack(parts)
 
     # -- compaction ----------------------------------------------------

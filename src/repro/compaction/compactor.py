@@ -57,6 +57,7 @@ class CompactionPolicy:
     max_group: int = 64             # bound one merge's working set
     target_bytes: int = 8 << 20     # stop growing a group near this
     read_fraction: float = 0.9      # merged blocks are read-mostly (RTHMS)
+    columnar: bool = True           # merged blocks get the colblock layout
 
 
 @dataclass(frozen=True)
@@ -130,7 +131,7 @@ class Compactor:
             attrs = self.clovis.store.meta(entry.oid).attrs
         except KeyError:
             return None
-        if attrs.get("kind") != "array":
+        if attrs.get("kind") not in ("array", "colblock"):
             return None
         shape = attrs.get("shape") or []
         if len(shape) != 2:
@@ -170,7 +171,7 @@ class Compactor:
     def _merge_group(self, manifest: ContainerManifest,
                      group: CompactionGroup, report: CompactionReport):
         t0 = time.time()
-        parts = [self.clovis.get_array(e.oid, _notify=False)
+        parts = [self.clovis.materialize(e.oid, _notify=False)
                  for e in group.entries]
         merged = np.ascontiguousarray(np.vstack(parts))
         store = self.clovis.store
@@ -178,9 +179,18 @@ class Compactor:
                               read_fraction=self.policy.read_fraction,
                               random_access=False)
         oid = manifest.allocate("blk")
+        # merged blocks are the read-mostly bulk of a container: lay
+        # them out columnar (when the facade supports it) so scans can
+        # fetch just the columns a query touches with ranged reads
+        columnar = (self.policy.columnar
+                    and hasattr(self.clovis, "put_columnar"))
         self._crash("before_merge_write")
-        self.clovis.put_array(oid, merged, container=group.container,
-                              layout=lay.Layout(lay.STRIPED, tier, 2))
+        if columnar:
+            self.clovis.put_columnar(oid, merged, container=group.container,
+                                     layout=lay.Layout(lay.STRIPED, tier, 2))
+        else:
+            self.clovis.put_array(oid, merged, container=group.container,
+                                  layout=lay.Layout(lay.STRIPED, tier, 2))
         self._crash("after_merge_write")     # block durable, manifest old
         entry = BlockEntry(oid, store.meta(oid).version,
                            int(merged.shape[0]), int(merged.nbytes),

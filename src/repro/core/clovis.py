@@ -231,15 +231,64 @@ class Clovis:
         dtype = _dtype_from_name(meta.attrs["dtype"])
         return np.frombuffer(raw, dtype=dtype).reshape(meta.attrs["shape"])
 
+    # ---- access interface: columnar blocks (core/columnar.py) ----
+
+    def put_columnar(self, oid: str, data, container: str = "default",
+                     layout: Optional[lay.Layout] = None,
+                     block_size: Optional[int] = None,
+                     txn: Optional[Transaction] = None):
+        """Store a 2-D row array (or list of 1-D columns) in the
+        columnar block layout: each column a contiguous typed run on a
+        block boundary, so ``read_columns`` fetches just the columns a
+        scan needs with ranged block reads."""
+        from repro.core import columnar as colb
+        bs = block_size or colb.DEFAULT_COL_BLOCK
+        payload, attrs = colb.encode_columns(data, bs)
+        if not self.exists(oid):
+            self.create(oid, block_size=bs, layout=layout,
+                        container=container, attrs=attrs)
+        meta = self.store.meta(oid)
+        if meta.block_size != bs:
+            raise ValueError(f"{oid}: existing block_size "
+                             f"{meta.block_size} != colblock {bs}")
+        meta.attrs.update(attrs)
+        self.store.write(oid, payload, txn=txn)
+
+    def read_columns(self, oid: str, cols: Optional[Sequence[int]] = None,
+                     _notify: bool = True) -> "ColumnBatch":
+        """Pruned columnar read: only the selected columns' blocks are
+        fetched for ``kind == 'colblock'`` objects (ranged reads).  Row-
+        major array objects materialize whole and slice — same result,
+        no I/O saving — so callers need not care how the partition is
+        laid out."""
+        from repro.core import columnar as colb
+        attrs = self.store.meta(oid).attrs
+        if attrs.get("kind") == colb.COLBLOCK_KIND:
+            rows, ncols = attrs["shape"]
+            sel = list(range(ncols)) if cols is None else list(cols)
+            out = {c: colb.read_column(self.store, oid, c, attrs,
+                                       _notify=_notify) for c in sel}
+            return colb.ColumnBatch(out, rows, ncols)
+        arr = self.materialize(oid, _notify=_notify)
+        if arr.ndim == 1:
+            arr = arr.reshape(-1, 1)
+        sel = list(range(arr.shape[1])) if cols is None else list(cols)
+        return colb.ColumnBatch({c: np.ascontiguousarray(arr[:, c])
+                                 for c in sel}, arr.shape[0], arr.shape[1])
+
     def materialize(self, oid: str, _notify: bool = True) -> np.ndarray:
         """Object payload as a numpy array: typed (``get_array``) for
-        ``kind == 'array'`` objects, raw uint8 otherwise — the single
+        ``kind == 'array'`` objects, column-reassembled rows for
+        ``kind == 'colblock'``, raw uint8 otherwise — the single
         materialization rule shared by function shipping (storage-side)
         and the analytics fetch-all path (caller-side), so the two can
         never diverge.  ``_notify=False`` marks an internal read (stats
         analysis): no read hooks, no heat/access bookkeeping."""
-        if self.store.meta(oid).attrs.get("kind") == "array":
+        kind = self.store.meta(oid).attrs.get("kind")
+        if kind == "array":
             return self.get_array(oid, _notify=_notify)
+        if kind == "colblock":
+            return self.read_columns(oid, _notify=_notify).to_rows()
         return np.frombuffer(self.get(oid, _notify=_notify), dtype=np.uint8)
 
     # ---- index interface ----

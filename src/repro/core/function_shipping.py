@@ -200,6 +200,29 @@ class FunctionShipper:
         return self._notify(ShipResult(oid, fn_name, False, error=err,
                                        retries=self.max_retries))
 
+    def ship_columns(self, fn_name: str, oid: str,
+                     columns: Sequence[int]) -> ShipResult:
+        """Shipped invocation over a column-pruned read: the registered
+        function receives a ``ColumnBatch`` holding only ``columns``,
+        read with ranged block fetches (colblock objects) instead of a
+        whole-object materialisation.  Same retry/version/observer
+        contract as ``ship``."""
+        if fn_name not in self._registry:
+            return ShipResult(oid, fn_name, False, error="unknown function")
+        fn = self._registry[fn_name]
+        err = ""
+        for attempt in range(self.max_retries + 1):
+            try:
+                ver = self._version_of(oid)
+                batch = self.clovis.read_columns(oid, list(columns))
+                return self._notify(
+                    ShipResult(oid, fn_name, True, fn(batch),
+                               retries=attempt, version=ver))
+            except Exception as e:     # resilient offload: catch & retry
+                err = f"{type(e).__name__}: {e}"
+        return self._notify(ShipResult(oid, fn_name, False, error=err,
+                                       retries=self.max_retries))
+
     def ship_async(self, fn_name: str, oid: str) -> "cf.Future[ShipResult]":
         return self._pool.submit(self.ship, fn_name, oid)
 

@@ -163,10 +163,15 @@ class ServingMixin:
     # -- cross-query fragment single-flight ----------------------------
 
     def _ship_fragment(self, name: str, frag_key: str, oid: str,
-                       stats=None):
+                       stats=None, columns=None):
+        # columns derive deterministically from frag_key's spec, so the
+        # flight key needs no extra component: every waiter on this key
+        # wants the same pruned (or full) fragment result
         key = self._cache_key(frag_key, oid)
         res, deduped = self.flights.run(
-            key, lambda: self.shipper.ship(name, oid))
+            key, lambda: (self.shipper.ship_columns(name, oid, columns)
+                          if columns is not None
+                          else self.shipper.ship(name, oid)))
         if stats is not None and deduped:
             with self._lock:
                 stats.dedup_hits += 1

@@ -481,24 +481,25 @@ def test_stats_catalog_selectivity_ewma_and_invalidation():
 
 
 def test_observed_selectivity_corrects_estimate(sage):
-    """A fragment whose true selectivity the uniform-range model
-    over-estimates gets a corrected (smaller) est_moved after one
-    observed execution."""
-    # col 0 is extremely skewed: range [0, 1000] but almost all zeros,
-    # so `col0 > 500` keeps ~0 rows while uniform-range estimates ~0.5
+    """A fragment whose true selectivity the model over-estimates gets
+    a corrected (smaller) est_moved after one observed execution."""
+    # col 0 is extremely skewed *within* a histogram bin: 511 values
+    # sit at 10 and one at 1600, so `col0 > 50` keeps ~0 rows while the
+    # equi-width histogram's in-bin interpolation estimates ~60%
     a = np.zeros((512, 2), np.int32)
-    a[0, 0] = 1000
+    a[:, 0] = 10
+    a[0, 0] = 1600
     a[:, 1] = 1
     sage.put_array("skewed/00", a, container="skewed")
     eng = sage.analytics(use_kernels=False, partial_cache_size=0)
     try:
         eng.stats.analyze(sage, "skewed")
-        ds = eng.scan("skewed").filter(col(0) > lit(500))
+        ds = eng.scan("skewed").filter(col(0) > lit(50))
         r1 = eng.run(ds)
         d1 = r1.stats.query_tag
         # the rows-shaped partial fed the actual selectivity back
         frag_key = frag_cache_key(
-            [{"op": "filter", "expr": (col(0) > lit(500)).to_spec()}])
+            [{"op": "filter", "expr": (col(0) > lit(50)).to_spec()}])
         obs = eng.stats.observed_selectivity(frag_key, "skewed/00")
         assert obs is not None and obs < 0.01
         # second planning round prices the fragment with the observation
